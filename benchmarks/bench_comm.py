@@ -1,0 +1,62 @@
+"""Paper Fig 10: file sending times vs split length.
+
+The paper bounced 30 min of audio between two VMs. The TPU-native analogue
+of master<->slave file transfer is host<->device transfer (feeding chunks to
+the mesh) — measured here per split length — plus the on-mesh redistribution
+cost, which the dry-run's collective term covers (EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SERF_AUDIO as cfg
+from benchmarks.util import table, save_json
+
+SPLITS = (5, 10, 15, 20, 30)
+
+
+def run(minutes=8.0):
+    rate = cfg.target_rate_hz
+    total = int(minutes * 60 * rate)
+    rng = np.random.RandomState(0)
+    flat = rng.randn(total).astype(np.float32)
+    rows = []
+    for split_s in SPLITS:
+        n = int(split_s * rate)
+        chunks = flat[: (total // n) * n].reshape(-1, n)
+        # round-trip each chunk individually (the paper sent file-by-file)
+        t0 = time.perf_counter()
+        for i in range(chunks.shape[0]):
+            dev = jax.device_put(chunks[i])
+            _ = np.asarray(dev)
+        per_chunk = time.perf_counter() - t0
+        # batched transfer (production mode)
+        t0 = time.perf_counter()
+        dev = jax.device_put(chunks)
+        _ = np.asarray(dev)
+        batched = time.perf_counter() - t0
+        rows.append([split_s, chunks.shape[0],
+                     per_chunk, batched,
+                     chunks.nbytes / 2**20 / max(per_chunk, 1e-9)])
+    table(rows, ["split_s", "n_chunks", "per-chunk RT (s)",
+                 "batched RT (s)", "per-chunk MB/s"],
+          title=f"Fig-10 equivalent: host<->device transfer, "
+                f"{minutes:.0f} min of audio")
+    save_json("comm_times", {"rows": rows})
+    print("\npaper finding: 5 s chunks transfer slower per-byte than >=10 s "
+          "(per-message overhead); transfer is small vs MMSE compute")
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--minutes", type=float, default=8.0)
+    run(minutes=ap.parse_args().minutes)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Paper Tables 2-3 + Fig 3: does the MMSE-STSA filter help detection?
+And: silence-detection ROC/AUC for PSD vs SNR thresholds, raw vs filtered.
+
+The paper found: (T2) MMSE does NOT improve rain/cicada detection (rain gets
+worse); (T3) SNR-threshold silence detection works equally well without
+MMSE, so silence detection goes BEFORE the expensive filter.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SERF_AUDIO as cfg
+from repro.core import stages as S
+from repro.core import detect as D
+from repro.core import indices as I
+from repro.data.synthetic import generate_labelled, LABELS
+from benchmarks.util import table, save_json
+
+
+def _auc(scores, positives):
+    order = np.argsort(-scores)
+    y = positives[order]
+    P, N = y.sum(), (~y).sum()
+    if P == 0 or N == 0:
+        return float("nan")
+    tps = np.cumsum(y)
+    fps = np.cumsum(~y)
+    tpr = np.concatenate([[0], tps / P])
+    fpr = np.concatenate([[0], fps / N])
+    return float(np.trapezoid(tpr, fpr))
+
+
+def run(minutes=4.0, seed=0):
+    n_seg = int(minutes * 60 / 15)
+    audio, labels = generate_labelled(seed, n_seg, segment_s=15.0)
+    names = np.array(LABELS)[labels]
+    x = jax.jit(lambda a: S.compress(S.to_mono(a), cfg))(jnp.asarray(audio))
+
+    def detector_acc(power):
+        idx = I.all_indices(power, cfg)
+        rain = np.asarray(D.detect_rain(idx, cfg))
+        cic = np.asarray(D.detect_cicada(idx, cfg))
+        rain_acc = ((rain == (names == "rain")).mean())
+        cic_acc = ((cic == (names == "cicada")).mean())
+        return rain_acc, cic_acc, idx
+
+    _, power_raw = jax.jit(lambda a: S.stft_chunks(a, cfg))(x)
+    filt = jax.jit(lambda a: S.mmse_denoise(a, cfg))(x)
+    _, power_f = jax.jit(lambda a: S.stft_chunks(a, cfg))(filt)
+
+    r_raw, c_raw, idx_raw = detector_acc(power_raw)
+    r_f, c_f, idx_f = detector_acc(power_f)
+    rows = [["Raw", c_raw, r_raw], ["MMSE STSA", c_f, r_f]]
+    table(rows, ["Filter", "Cicada Acc", "Rain Acc"],
+          title="Table-2 equivalent: detection accuracy raw vs MMSE-filtered")
+
+    # Table 3 / Fig 3: silence AUC, PSD vs SNR scores, raw vs filtered
+    sil = names == "silence"
+    rows3 = []
+    for src, idx in [("Raw", idx_raw), ("Filtered", idx_f)]:
+        auc_psd = _auc(-np.asarray(idx["psd"]), sil)
+        auc_snr = _auc(-np.asarray(idx["snr"]), sil)
+        rows3.append([src, "PSD", auc_psd])
+        rows3.append([src, "SNR", auc_snr])
+    table(rows3, ["Audio Source", "Index", "AUC"],
+          title="Table-3 equivalent: silence-removal AUC")
+    save_json("detector_accuracy", {
+        "table2": rows, "table3": rows3,
+        "finding_mmse_no_help": bool(r_f <= r_raw + 0.02),
+        "finding_snr_robust": bool(
+            rows3[1][2] > 0.85 and rows3[3][2] > 0.85),
+    })
+    print(f"\npaper findings: MMSE does not improve rain detection "
+          f"({r_raw:.3f} -> {r_f:.3f}); SNR-based silence AUC is "
+          f"MMSE-insensitive ({rows3[1][2]:.3f} raw vs {rows3[3][2]:.3f} "
+          f"filtered) -> silence detection placed BEFORE MMSE")
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--minutes", type=float, default=4.0)
+    run(minutes=ap.parse_args().minutes)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""The paper's HEADLINE economy, measured on-device: early exit (two-phase,
+MMSE on survivors only) vs no early exit (fused, masked MMSE on everything).
+
+The paper saves most of the dominant MMSE cost by deleting rain/silence
+chunks first; here the same pipeline runs both ways on the same audio and
+reports wall-clock + the survivor fraction (CPU wall time; the TPU-side
+equivalent is the flops/bytes delta in EXPERIMENTS.md §Perf cell 3).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SERF_AUDIO as cfg
+from repro.core.pipeline import preprocess_fused, preprocess_two_phase
+from repro.data.synthetic import generate_labelled
+from benchmarks.util import table, save_json
+
+
+def run(minutes=4.0, seed=1, rainy=True):
+    n_long = max(4, int(minutes))
+    probs = (0.35, 0.25, 0.1, 0.3) if rainy else (0.6, 0.1, 0.1, 0.2)
+    audio, _ = generate_labelled(seed, n_long * 12, segment_s=5.0,
+                                 label_probs=probs, persistence=0.7)
+    S5 = audio.shape[-1]
+    chunks = jnp.asarray(audio.reshape(n_long, 12, 2, S5)
+                         .transpose(0, 2, 1, 3).reshape(n_long, 2, 12 * S5))
+
+    fused = jax.jit(lambda a: preprocess_fused(cfg, a))
+    out = jax.block_until_ready(fused(chunks))          # compile + warm
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fused(chunks))
+    t_fused = time.perf_counter() - t0
+
+    _ = preprocess_two_phase(cfg, chunks, pad_multiple=1)   # warm both jits
+    t0 = time.perf_counter()
+    cleaned, det, n_kept = preprocess_two_phase(cfg, chunks, pad_multiple=1)
+    t_two = time.perf_counter() - t0
+
+    frac = n_kept / int(det.stats["n_chunks5"])
+    rows = [["fused (no early exit)", t_fused, 1.0],
+            ["two-phase (paper)", t_two, t_fused / t_two]]
+    table(rows, ["mode", "wall s", "speedup"],
+          title=f"Early-exit economy: {minutes:.0f} min of audio, "
+                f"survivors {frac:.0%}")
+    save_json("early_exit", {
+        "t_fused": t_fused, "t_two_phase": t_two,
+        "survivor_frac": frac,
+        "finding_early_exit_saves": bool(t_two < t_fused),
+    })
+    print(f"\npaper's claim: skipping removed audio before the expensive "
+          f"stage saves wall time -> {t_fused:.2f}s vs {t_two:.2f}s "
+          f"({'confirmed' if t_two < t_fused else 'NOT confirmed'} at "
+          f"{frac:.0%} survivorship)")
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--minutes", type=float, default=4.0)
+    run(minutes=ap.parse_args().minutes)
+
+
+if __name__ == "__main__":
+    main()

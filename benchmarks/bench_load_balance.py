@@ -1,0 +1,77 @@
+"""Paper Figs 14-18: load balance across slaves (DES) + the on-device
+survivor balance from the real pipeline (scheduler.balance_stats)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.des import simulate
+from benchmarks.bench_scaling import paper_costs
+from benchmarks.util import table, save_json
+
+
+def run(hours=2.0, trials=4):
+    costs = paper_costs()
+    total_s = hours * 3600
+    out = {}
+    # Figs 14-16: equal 4-core slaves
+    for n_slaves in (2, 3, 4):
+        rows = []
+        for t in range(trials):
+            sim = simulate(total_s * (1 + 0.01 * t), costs, [4] * n_slaves,
+                           chunk_s=15.0)
+            rows.append([t + 1] + sim["per_slave_chunks"])
+        table(rows, ["trial"] + [f"slave{j}" for j in range(n_slaves)],
+              title=f"Figs 14-16 equivalent: chunks per slave, "
+                    f"{n_slaves} slaves")
+        counts = np.array([r[1:] for r in rows], float)
+        imb = counts.max(1) / counts.mean(1)
+        out[f"equal_{n_slaves}"] = {"rows": rows,
+                                    "max_imbalance": float(imb.max())}
+    # Figs 17-18: heterogeneous
+    for label, slaves in [("2x2core vs 4core(master)", [4, 2, 2]),
+                          ("4x1core vs 4core(master)", [4, 1, 1, 1, 1])]:
+        sim = simulate(total_s, costs, slaves, chunk_s=15.0)
+        counts = np.array(sim["per_slave_chunks"], float)
+        expect = np.array(slaves, float)
+        ratio = counts / counts.sum()
+        want = expect / expect.sum()
+        rows = [[f"slave{j}({c}c)", int(counts[j]), ratio[j], want[j]]
+                for j, c in enumerate(slaves)]
+        table(rows, ["slave", "chunks", "share", "core share"],
+              title=f"Figs 17-18 equivalent: {label}")
+        out[label] = {"proportional": bool(
+            np.abs(ratio - want).max() < 0.08)}
+
+    # on-device: survivor balance before/after compaction
+    from repro.core.pipeline import detection_phase
+    from repro.core.scheduler import balance_stats
+    from repro.configs import SERF_AUDIO as cfg
+    from repro.data.synthetic import generate_labelled
+    audio, _ = generate_labelled(5, 8 * 12, segment_s=5.0)
+    S5 = audio.shape[-1]
+    chunks = (audio.reshape(8, 12, 2, S5).transpose(0, 2, 1, 3)
+              .reshape(8, 2, 12 * S5))
+    det = jax.jit(lambda a: detection_phase(cfg, a))(jnp.asarray(chunks))
+    bs = jax.jit(lambda k: balance_stats(k, 8))(det.keep)
+    print(f"\non-device survivor imbalance over 8 shards: "
+          f"{float(bs['imbalance']):.3f} -> "
+          f"{float(bs['imbalance_after_compact']):.3f} after compaction "
+          f"(loads: {np.asarray(bs['loads']).tolist()})")
+    out["device_compaction"] = {
+        "before": float(bs["imbalance"]),
+        "after": float(bs["imbalance_after_compact"]),
+    }
+    save_json("load_balance", out)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hours", type=float, default=2.0)
+    run(hours=ap.parse_args().hours)
+
+
+if __name__ == "__main__":
+    main()

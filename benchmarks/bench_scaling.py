@@ -1,0 +1,148 @@
+"""Paper Figs 11-13 + the comparison section: scalability of the
+master-slave system, via the DES calibrated with measured stage costs.
+
+Fig 11: execution time vs cores (4-core VMs, master co-runs a slave).
+Fig 12: speedup over 1-core serial.
+Fig 13: few large machines vs many small machines.
+Footer: comparison against Dugan (6.57x @8), Truskinger (24x @160),
+Thudumu (7.5x @13), and the paper itself (21.76x @32).
+"""
+from __future__ import annotations
+
+from benchmarks.des import StageCosts, simulate, serial_time
+from benchmarks.util import table, save_json, load_json
+
+
+# the paper's Table 1, seconds per 2 h (=7200 s) of audio, per split length
+_PAPER_T1 = {
+    #        split:     5        10       15       20       30
+    "split":        (7.85,    7.95,    8.13,    9.24,    8.87),
+    "down":         (10.18,   9.59,    9.30,    9.29,    9.57),
+    "hpf":          (86.63,   47.79,   34.8,    28.2,    21.67),
+    "fft":          (2.39,    47.79,   71.90,   73.15,   73.21),
+    "rain":         (41.11,   40.46,   39.86,   39.94,   42.67),
+    "cicada_det":   (30.47,   31.58,   32.04,   32.32,   31.36),
+    "cicada_filt":  (103.48,  64.30,   51.94,   45.27,   37.46),
+    "mmse":         (1020.57, 1002.65, 993.10,  986.92,  923.21),
+}
+_T1_SPLITS = (5, 10, 15, 20, 30)
+
+
+def paper_costs(split_s=15):
+    """The paper's own Table-1 cost profile (seconds per second of audio at
+    the given split length; their Java/SoX stack): MMSE dominates."""
+    i = _T1_SPLITS.index(split_s)
+    c = {k: v[i] for k, v in _PAPER_T1.items()}
+    return StageCosts(
+        master_prep=(c["split"] + c["down"] + c["hpf"]) / 7200,
+        detect=(c["fft"] + c["rain"] + c["cicada_det"]) / 7200,
+        cicada_filter=c["cicada_filt"] / 7200,
+        silence=10.0 / 7200,               # paper: ~10 s, split-insensitive
+        mmse=c["mmse"] / 7200,
+        comm_per_mb=4.0 / 302.0,           # paper Fig 10: <4 s per 302 MB
+    )
+
+
+def costs_from_calibration(split_s=15):
+    try:
+        calib = load_json("stage_times")["calibration"][str(split_s)]
+    except Exception:
+        return paper_costs(split_s)
+    try:
+        comm = load_json("comm_times")["rows"][2][2]
+        comm_per_mb = comm / (8 * 60 * 22_050 * 4 / 2**20)
+    except Exception:
+        comm_per_mb = 4.0 / 302.0
+    return StageCosts(comm_per_mb=comm_per_mb, **calib)
+
+
+def _curve(costs, total_s, label):
+    t1 = serial_time(total_s, costs)
+    rows = []
+    speedups = {}
+    for cores in (1, 2, 4, 8, 12, 16, 20, 24, 28, 32):
+        if cores == 1:
+            t = t1
+        else:
+            n_slaves = max(1, cores // 4)
+            slaves = [4] * n_slaves if cores % 4 == 0 else \
+                [4] * (cores // 4) + [cores % 4]
+            sim = simulate(total_s, costs, slaves, chunk_s=15.0,
+                           queue_size=5, send_interval_s=2.0, master_cores=4)
+            t = sim["makespan_s"]
+        speedups[cores] = t1 / t
+        rows.append([cores, t, t1 / t, t1 / t / cores])
+    table(rows, ["cores", "exec time (s)", "speedup", "efficiency"],
+          title=label)
+    return t1, speedups
+
+
+def run(hours=2.0):
+    total_s = hours * 3600
+    # (a) the paper's cost profile — validates the paper's scaling claim
+    _, paper_speedups = _curve(
+        paper_costs(), total_s,
+        f"Figs 11-12, PAPER cost profile (Table 1, Java/SoX): {hours:.1f} h")
+    # (b) our measured JAX/XLA profile — the bottleneck has MOVED
+    costs = costs_from_calibration()
+    t1, speedups = _curve(
+        costs, total_s,
+        "Figs 11-12, OUR measured cost profile (XLA kernels)")
+    print(
+        "\nNOTE (reproduction finding): with the paper's Java cost profile\n"
+        "(MMSE ~10x everything) the master-slave design scales near-\n"
+        f"linearly ({paper_speedups[32]:.1f}x @32); with OUR XLA kernel\n"
+        "profile (MMSE ~100x faster) the serial master prep becomes the\n"
+        f"Amdahl bottleneck ({speedups[32]:.1f}x @32). Our TPU-native\n"
+        "pipeline therefore data-parallelizes the master stages too (they\n"
+        "live in the same sharded jit) — no serial master exists.\n")
+
+    # Fig 13 + comparison run in the PAPER's cost environment
+    pc = paper_costs()
+    t1p = serial_time(total_s, pc)
+    het_rows = []
+    for label, slaves in [
+        ("1x4-core slave (+master slave)", [4, 4]),
+        ("2x2-core slaves (+master slave)", [4, 2, 2]),
+        ("4x1-core slaves (+master slave)", [4, 1, 1, 1, 1]),
+        ("master only", [4]),
+    ]:
+        sim = simulate(total_s, pc, slaves, chunk_s=15.0, master_cores=4)
+        het_rows.append([label, sum(slaves), sim["makespan_s"],
+                         t1p / sim["makespan_s"]])
+    table(het_rows, ["config", "cores", "exec time (s)", "speedup"],
+          title="Fig-13 equivalent: small vs large machines (paper costs)")
+
+    s32 = paper_speedups[32]
+    s13 = t1p / simulate(total_s, pc, [4, 4, 4, 1], chunk_s=15.0,
+                         master_cores=4)["makespan_s"]
+    comp_rows = [
+        ["THIS WORK (paper)", 32, 21.76],
+        ["THIS REPRODUCTION (DES, paper costs)", 32, round(s32, 2)],
+        ["Dugan et al. [16] best", 8, 6.57],
+        ["Truskinger et al. [15]", 160, 24.0],
+        ["Thudumu et al. [17]", 13, 7.5],
+        ["paper @ Thudumu's 13 cores", 13, 9.98],
+        ["THIS REPRODUCTION @ 13 cores", 13, round(s13, 2)],
+    ]
+    table(comp_rows, ["system", "cores", "speedup over serial"],
+          title="Comparison section (paper reports / our DES)")
+    save_json("scaling", {"paper_speedups": paper_speedups,
+                          "our_speedups": speedups, "hetero": het_rows,
+                          "comparison": comp_rows,
+                          "near_linear_at_32": bool(s32 > 18.0)})
+    print(f"paper headline: 21.76x @32 cores; reproduction (paper costs): "
+          f"{s32:.2f}x @32 "
+          f"({'near-linear reproduced' if s32 > 18 else 'BELOW paper'})")
+    return paper_speedups
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hours", type=float, default=2.0)
+    run(hours=ap.parse_args().hours)
+
+
+if __name__ == "__main__":
+    main()

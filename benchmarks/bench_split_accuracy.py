@@ -1,0 +1,89 @@
+"""Paper Tables 4-6 / Figs 4-7: detection accuracy vs split length.
+
+Ground truth is labelled at 5 s resolution (as the paper's manual labels);
+each detector runs at split lengths 5/10/15/20/30 s and is scored at 5 s
+resolution — a chunk-level decision fans out to its 5 s cells, so longer
+splits pay for within-chunk mixtures exactly as in the paper's protocol.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SERF_AUDIO as cfg
+from repro.core import stages as S
+from repro.core import detect as D
+from repro.core import indices as I
+from repro.data.synthetic import generate_labelled, LABELS
+from benchmarks.util import table, save_json
+
+SPLITS = (5, 10, 15, 20, 30)
+
+
+def run(minutes=8.0, seed=1):
+    n_seg = int(minutes * 60 / 5)
+    n_seg -= n_seg % 6                      # 30 s divisibility
+    audio, labels = generate_labelled(seed, n_seg, segment_s=5.0)
+    names = np.array(LABELS)[labels]
+    x = np.asarray(jax.jit(lambda a: S.compress(S.to_mono(a), cfg))(
+        jnp.asarray(audio)))
+    n5 = x.shape[1]
+    flat = x.reshape(-1)
+
+    results = {}
+    all_rows = {}
+    for det_name, detect_fn, positive in [
+        ("cicada", lambda idx: D.detect_cicada(idx, cfg), "cicada"),
+        ("rain", lambda idx: D.detect_rain(idx, cfg), "rain"),
+        ("silence", lambda idx: D.detect_silence(idx, cfg), "silence"),
+    ]:
+        rows = []
+        for split_s in SPLITS:
+            k = split_s // 5
+            n = k * n5
+            chunks = jnp.asarray(flat[: (flat.size // n) * n].reshape(-1, n))
+            _, power = jax.jit(lambda a: S.stft_chunks(a, cfg))(chunks)
+            idx = I.all_indices(power, cfg)
+            pred_chunk = np.asarray(detect_fn(idx))
+            pred5 = np.repeat(pred_chunk, k)[: len(names)]
+            if det_name == "silence":
+                # paper: rain samples excluded from the silence scoring
+                sel = names != "rain"
+            else:
+                sel = np.ones(len(names), bool)
+            y = (names == positive)[sel]
+            p = pred5[: len(names)][sel]
+            tp = float((p & y).mean())
+            fp = float((p & ~y).mean())
+            fn = float((~p & y).mean())
+            tn = float((~p & ~y).mean())
+            acc = tp + tn
+            rows.append([split_s, 100 * tp, 100 * fp, 100 * fn, 100 * tn,
+                         100 * acc])
+        all_rows[det_name] = rows
+        table(rows, ["split_s", "TP%", "FP%", "FN%", "TN%", "Acc%"],
+              title=f"Table 4-6 equivalent: {det_name} detection vs split "
+                    "length (5 s scoring resolution)")
+        results[det_name] = rows
+
+    # paper findings: rain/cicada are split-length-insensitive;
+    # silence detection degrades at long splits (silence is short-lived)
+    sil_acc = [r[-1] for r in results["silence"]]
+    cic_acc = [r[-1] for r in results["cicada"]]
+    save_json("split_accuracy", {
+        "tables": all_rows,
+        "finding_cicada_insensitive": bool(max(cic_acc) - min(cic_acc) < 8),
+        "finding_silence_degrades": bool(sil_acc[0] >= max(sil_acc[2:]) - 1),
+    })
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--minutes", type=float, default=8.0)
+    run(minutes=ap.parse_args().minutes)
+
+
+if __name__ == "__main__":
+    main()

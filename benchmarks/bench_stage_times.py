@@ -1,0 +1,107 @@
+"""Paper Table 1 / Fig 1: per-stage execution time vs split length.
+
+Each stage is measured INDEPENDENTLY on the same audio (as in the paper),
+for split lengths 5..30 s. Also writes the calibration file the DES
+simulator (Figs 11-18) consumes: seconds of compute per second of audio.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SERF_AUDIO as cfg
+from repro.core import stages as S
+from repro.core import detect as D
+from repro.core import indices as I
+from repro.data.synthetic import generate_labelled
+from repro.kernels.fir_hpf.ops import highpass
+from benchmarks.util import time_fn, table, save_json
+
+SPLITS = (5, 10, 15, 20, 30)
+
+
+def _audio_minutes(minutes, seed=0):
+    n_seg = int(minutes * 60 / 5)
+    audio, labels = generate_labelled(seed, n_seg, segment_s=5.0)
+    return audio, labels
+
+
+def run(minutes=2.0, seed=0):
+    audio, _ = _audio_minutes(minutes, seed)
+    n_seg, _, S5src = audio.shape
+    total_src_s = n_seg * 5.0
+    mono = np.asarray(S.to_mono(jnp.asarray(audio)))        # 44.1 kHz
+    x22 = np.asarray(jax.jit(lambda a: S.compress(a, cfg))(jnp.asarray(mono)))
+
+    def chunks_of(arr, split_s, rate):
+        n = int(split_s * rate)
+        total = arr.shape[0] * arr.shape[1]
+        flat = arr.reshape(-1)[: (total // n) * n]
+        return jnp.asarray(flat.reshape(-1, n))
+
+    rows = []
+    calib = {}
+    for split_s in SPLITS:
+        c_src = chunks_of(mono, split_s, cfg.source_rate_hz)
+        c22 = chunks_of(x22, split_s, cfg.target_rate_hz)
+
+        t_split, _ = time_fn(
+            jax.jit(lambda a: a.reshape(-1, c_src.shape[1])), mono)
+        t_down, _ = time_fn(jax.jit(lambda a: S.compress(a, cfg)), c_src)
+        t_hpf, _ = time_fn(jax.jit(highpass), c22)
+        stft_fn = jax.jit(lambda a: S.stft_chunks(a, cfg)[1])
+        t_fft, _ = time_fn(stft_fn, c22)
+        power = stft_fn(c22)
+        t_rain, _ = time_fn(jax.jit(
+            lambda p: D.detect_rain(I.all_indices(p, cfg), cfg)), power)
+        t_cic, _ = time_fn(jax.jit(
+            lambda p: D.detect_cicada(I.all_indices(p, cfg), cfg)), power)
+
+        def cic_filter(a):
+            spec, p = S.stft_chunks(a, cfg)
+            idx = I.all_indices(p, cfg)
+            mask = D.detect_cicada(idx, cfg)
+            spec = S.remove_cicada_band(spec, idx["cicada_peak_bin"], mask,
+                                        cfg)
+            return S.istft_chunks(spec, a.shape[1], cfg)
+        t_cicf, _ = time_fn(jax.jit(cic_filter), c22)
+        t_sil, _ = time_fn(jax.jit(lambda p: I.snr_est(p)), power)
+        t_mmse, _ = time_fn(jax.jit(lambda a: S.mmse_denoise(a, cfg)), c22)
+
+        rows.append([split_s, t_split, t_down, t_hpf, t_fft, t_rain,
+                     t_cic, t_cicf, t_sil, t_mmse])
+        calib[split_s] = {
+            "master_prep": (t_split + t_down) / total_src_s,
+            "detect": (t_fft + t_rain + t_cic) / total_src_s,
+            "cicada_filter": t_cicf / total_src_s,
+            "silence": t_sil / total_src_s,
+            "mmse": t_mmse / total_src_s,
+        }
+
+    headers = ["split_s", "Splitting", "Down+AA", "HPF", "FFT(DFT)",
+               "RainDet", "CicadaDet", "CicadaFilt", "Silence", "MMSE-STSA"]
+    out = table(rows, headers,
+                title=f"Table-1 equivalent: stage seconds for "
+                      f"{minutes:.1f} min of audio, per split length")
+    # The paper's two key findings, checked programmatically:
+    mmse_col = [r[-1] for r in rows]
+    others = [sum(r[1:-1]) for r in rows]
+    finding_mmse_dominates = all(m > o for m, o in zip(mmse_col, others))
+    save_json("stage_times", {"rows": rows, "headers": headers,
+                              "minutes": minutes, "calibration": calib,
+                              "mmse_dominates": finding_mmse_dominates})
+    print(f"\nMMSE-STSA dominates all other stages combined: "
+          f"{finding_mmse_dominates} (paper Table 1 finding)")
+    return calib
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--minutes", type=float, default=2.0)
+    run(minutes=ap.parse_args().minutes)
+
+
+if __name__ == "__main__":
+    main()

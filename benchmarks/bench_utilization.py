@@ -1,0 +1,55 @@
+"""Paper Figs 19-20: CPU utilisation (~90% through the run) and RAM usage.
+
+CPU: DES busy-core fraction over time. RAM: analytic footprint of the
+pipeline's buffers (queue depth x chunk bytes + batch working set) —
+mirroring the paper's observation that RAM is under-utilised because the
+workload streams.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.des import simulate
+from benchmarks.bench_scaling import paper_costs
+from benchmarks.util import table, save_json
+
+
+def run(hours=2.0):
+    costs = paper_costs()
+    sim = simulate(hours * 3600, costs, [4, 4, 4, 4], chunk_s=15.0,
+                   trace_dt=2.0)
+    trace = sim["utilization_trace"]
+    ts = np.array([t for t, _ in trace])
+    us = np.array([u for _, u in trace])
+    mid = us[(ts > ts.max() * 0.1) & (ts < ts.max() * 0.9)]
+    rows = [[f"{int(t)}s", f"{100 * u:.0f}%"] for t, u in
+            trace[:: max(1, len(trace) // 12)]]
+    table(rows, ["t", "CPU util"],
+          title="Fig-19 equivalent: utilisation over the run (DES)")
+    print(f"steady-state mean utilisation: {100 * mid.mean():.1f}% "
+          f"(paper: ~90%)")
+
+    # Fig 20: RAM model per 16 GB slave
+    chunk_mb = 15 * 44_100 * 2 * 4 / 2**20
+    queue_mb = 5 * chunk_mb
+    working_mb = 4 * chunk_mb * 3          # per-core working set (stft+spec)
+    total_mb = queue_mb + working_mb + 400  # + runtime baseline
+    print(f"RAM model per slave: queue {queue_mb:.0f} MB + working "
+          f"{working_mb:.0f} MB + runtime ~400 MB = {total_mb:.0f} MB "
+          f"of 16 GB ({100 * total_mb / 16384:.1f}% — paper: ~11%)")
+    save_json("utilization", {
+        "steady_state_util": float(mid.mean()),
+        "ram_frac": float(total_mb / 16384),
+        "finding_cpu_bound": bool(mid.mean() > 0.8),
+    })
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hours", type=float, default=2.0)
+    run(hours=ap.parse_args().hours)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Discrete-event simulator of the paper's master-slave system, calibrated
+with per-stage costs MEASURED on this machine (bench_stage_times writes the
+calibration json).
+
+This is how Figs 11-18 are reproduced without a 32-core cluster: this
+container has ONE core, so wall-clock multi-process scaling cannot be
+measured directly; the simulator replays the paper's architecture with
+measured per-second-of-audio stage costs.
+
+Model (faithful to the paper's description):
+  * The master splits + downsamples + high-pass filters long chunks and
+    feeds a bounded pull queue. The master process SHARES its 4-core VM
+    with a slave process (paper: "a slave node is also executed on the same
+    machine as the master"), so prep work competes with that slave's
+    processing — no free cores.
+  * Slaves run detection on every chunk, the cicada filter on the detected
+    fraction, silence detection, and MMSE on the surviving fraction.
+  * Results return at the next send-interval boundary; transfers cost
+    comm_per_mb (measured, Fig-10 bench).
+  * Each slave pays a per-chunk coordination overhead amortized over its
+    cores (the paper's central-slave-thread overhead, which made 1-core
+    slaves slightly slower — Fig 13).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+
+
+@dataclass
+class StageCosts:
+    """Seconds of compute per second of source audio, per stage (measured)."""
+    master_prep: float      # split + mono + downsample + HPF (on master)
+    detect: float           # STFT + indices + rain/cicada rules
+    cicada_filter: float    # band-stop + ISTFT (applied to cicada fraction)
+    silence: float          # envelope SNR at 5 s
+    mmse: float             # MMSE-STSA (applied to survivor fraction)
+    comm_per_mb: float      # transfer cost per MB (measured)
+
+    frac_cicada: float = 0.09
+    frac_survive: float = 0.45
+
+    def slave_cost_per_chunk(self, chunk_s):
+        """Expected compute seconds for one chunk of chunk_s seconds."""
+        return chunk_s * (self.detect
+                          + self.frac_cicada * self.cicada_filter
+                          + self.silence
+                          + self.frac_survive * self.mmse)
+
+
+def simulate(total_audio_s, costs: StageCosts, slaves_cores,
+             chunk_s=15.0, queue_size=5, send_interval_s=2.0,
+             chunk_mb=None, master_cores=4, coord_s_per_chunk=0.004,
+             pull_latency_s=1.0, trace_dt=None):
+    """Simulate preprocessing total_audio_s seconds of audio.
+
+    slaves_cores: cores per slave process; slave 0 lives on the master's VM
+    and its cores also execute the master's prep tasks.
+
+    queue_size models the paper's bounded pull queue: when the per-chunk
+    processing time is short relative to the pull round-trip latency, a
+    too-small queue drains and the slave stalls (the paper's one bad
+    configuration: 5 s splits with queue 3).
+    Returns makespan, per-slave chunk counts, utilization, optional trace."""
+    if chunk_mb is None:
+        chunk_mb = chunk_s * 44_100 * 2 * 2 / 2**20   # stereo int16 source
+    n_chunks = int(total_audio_s / chunk_s)
+    prep_per_chunk = chunk_s * costs.master_prep
+
+    # per-slave core heaps: (next_free_time, core_id)
+    heaps = [[(0.0, c) for c in range(cores)] for cores in slaves_cores]
+    for h in heaps:
+        heapq.heapify(h)
+    processed = [0] * len(slaves_cores)
+    busy = [0.0] * len(slaves_cores)
+
+    # 1) master prep tasks occupy slave 0's VM cores
+    ready = []
+    for i in range(n_chunks):
+        free_t, core = heapq.heappop(heaps[0])
+        end = free_t + prep_per_chunk
+        heapq.heappush(heaps[0], (end, core))
+        busy[0] += prep_per_chunk
+        ready.append(end + costs.comm_per_mb * chunk_mb)
+
+    # queue-drain stall (per chunk, amortized)
+    base_dur = costs.slave_cost_per_chunk(chunk_s)
+    stall = max(0.0, pull_latency_s - max(queue_size - 1, 0) * base_dur)
+
+    # 2) processing tasks go to the slave whose earliest core is free first
+    #    (rotating tie-break = the master's round-robin dispatch)
+    finish = []
+    trace = []
+    n_slaves = len(heaps)
+    for i in range(n_chunks):
+        best = min(range(n_slaves),
+                   key=lambda s: (max(heaps[s][0][0], ready[i]),
+                                  (s - i) % n_slaves))
+        free_t, core = heapq.heappop(heaps[best])
+        start = max(free_t, ready[i])
+        dur = (base_dur + stall
+               + coord_s_per_chunk / max(slaves_cores[best], 1))
+        end = start + dur
+        heapq.heappush(heaps[best], (end, core))
+        processed[best] += 1
+        busy[best] += dur
+        ret = ((int(end / send_interval_s) + 1) * send_interval_s
+               + costs.comm_per_mb * chunk_mb * costs.frac_survive)
+        finish.append(ret)
+        if trace_dt:
+            trace.append((start, end, best))
+
+    makespan = max(finish) if finish else 0.0
+    util = [busy[s] / (makespan * slaves_cores[s])
+            for s in range(len(slaves_cores))]
+    out = {
+        "makespan_s": makespan,
+        "per_slave_chunks": processed,
+        "per_slave_utilization": util,
+        "n_chunks": n_chunks,
+    }
+    if trace_dt:
+        cores_total = sum(slaves_cores)
+        ts = [i * trace_dt for i in range(int(makespan / trace_dt) + 1)]
+        usage = []
+        for t in ts:
+            b = sum(1 for (a, b_, _) in trace if a <= t < b_)
+            usage.append(min(1.0, b / cores_total))
+        out["utilization_trace"] = list(zip(ts, usage))
+    return out
+
+
+def serial_time(total_audio_s, costs: StageCosts):
+    """1-core sequential execution (the paper's baseline process)."""
+    per_s = (costs.master_prep + costs.detect
+             + costs.frac_cicada * costs.cicada_filter + costs.silence
+             + costs.frac_survive * costs.mmse)
+    return total_audio_s * per_s

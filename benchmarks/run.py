@@ -1,0 +1,80 @@
+"""Benchmark aggregator: one bench per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+
+Order matters: stage-time calibration feeds the DES benches; comm feeds the
+DES transfer model. The roofline table prints from the dry-run records.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow on 1 CPU core)")
+    args = ap.parse_args()
+    minutes = 16.0 if args.full else 2.0
+    hours = 2.0
+
+    from benchmarks import (bench_stage_times, bench_two_split,
+                            bench_detector_accuracy, bench_split_accuracy,
+                            bench_comm, bench_config_search, bench_scaling,
+                            bench_load_balance, bench_utilization,
+                            bench_early_exit)
+    steps = [
+        ("Table 1 / Fig 1: stage times",
+         lambda: bench_stage_times.run(minutes=minutes)),
+        ("Fig 2: two-split HPF",
+         lambda: bench_two_split.run(minutes=min(minutes, 4.0))),
+        ("Fig 10: communication",
+         lambda: bench_comm.run(minutes=4.0 if not args.full else 30.0)),
+        ("Tables 2-3 / Fig 3: detector accuracy vs MMSE",
+         lambda: bench_detector_accuracy.run(minutes=max(4.0, minutes))),
+        ("Tables 4-6 / Figs 4-7: split-length accuracy",
+         lambda: bench_split_accuracy.run(minutes=max(6.0, minutes))),
+        ("Table 7: config search",
+         lambda: bench_config_search.run(hours=hours)),
+        ("Figs 11-13: scaling", lambda: bench_scaling.run(hours=hours)),
+        ("Figs 14-18: load balance",
+         lambda: bench_load_balance.run(hours=hours)),
+        ("Figs 19-20: utilisation",
+         lambda: bench_utilization.run(hours=hours)),
+        ("Headline: early-exit economy (on-device)",
+         lambda: bench_early_exit.run(minutes=4.0)),
+    ]
+    failures = []
+    for name, fn in steps:
+        print(f"\n{'=' * 72}\n>> {name}\n{'=' * 72}", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+            print(f"[{name}] done in {time.time() - t0:.1f}s", flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+
+    print(f"\n{'=' * 72}\n>> Roofline (from dry-run records, if present)\n"
+          f"{'=' * 72}", flush=True)
+    try:
+        from benchmarks import roofline
+        recs = roofline.load_records("results/dryrun_final.json")
+        recs += roofline.load_records("results/dryrun_audio_final.json")
+        if recs:
+            roofline.fmt_table(recs)
+        else:
+            print("no dry-run records yet (run repro.launch.dryrun --all)")
+    except Exception:
+        failures.append("roofline")
+        traceback.print_exc()
+
+    print(f"\n{len(steps) - len(failures)}/{len(steps)} benches OK"
+          + (f"; FAILED: {failures}" if failures else ""))
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Benchmark helpers: timing, tables, result persistence."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def time_fn(fn, *args, warmup=1, iters=3):
+    """Median wall time of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), float(np.std(ts))
+
+
+def table(rows, headers, title=None, floatfmt="{:.3f}"):
+    def fmt(v):
+        if isinstance(v, float):
+            return floatfmt.format(v)
+        return str(v)
+    widths = [max(len(h), *(len(fmt(r[i])) for r in rows))
+              for i, h in enumerate(headers)] if rows else [len(h) for h in headers]
+    lines = []
+    if title:
+        lines.append(f"== {title} ==")
+    lines.append("  ".join(h.ljust(w) for h, w in zip(headers, widths)))
+    lines.append("  ".join("-" * w for w in widths))
+    for r in rows:
+        lines.append("  ".join(fmt(v).ljust(w) for v, w in zip(r, widths)))
+    out = "\n".join(lines)
+    print(out, flush=True)
+    return out
+
+
+def save_json(name, obj):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name if name.endswith(".json")
+                        else name + ".json")
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+    return path
+
+
+def load_json(name):
+    path = os.path.join(RESULTS_DIR, name if name.endswith(".json")
+                        else name + ".json")
+    with open(path) as f:
+        return json.load(f)

@@ -1,0 +1,92 @@
+"""End-to-end driver (deliverable (b)): the paper's preprocessing pipeline
+feeding a whisper-family audio model — preprocess, featurize, train.
+
+The pipeline's cleaned 5 s chunks become STFT-frame embeddings (the stubbed
+conv frontend per the brief), and the whisper-small-family encoder-decoder
+trains to predict per-chunk pseudo-transcripts (synthetic token streams keyed
+to the chunk's acoustic label — enough structure for the loss to fall).
+
+  PYTHONPATH=src python examples/preprocess_and_train.py --steps 60
+(reduced model; a full-size run uses --no-reduced on real hardware)
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SERF_AUDIO, ARCHS, reduced
+from repro.core.pipeline import preprocess_two_phase
+from repro.core import stages as S
+from repro.data.synthetic import generate_labelled
+from repro.distributed.sharding import NULL_RULES
+from repro.models.zoo import build_model
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import make_train_step, init_train_state
+
+
+def featurize(cfg_audio, model_cfg, chunks, n_frames=64):
+    """Cleaned 5 s chunks -> frame embeddings (B, n_frames, d_model): the
+    'conv frontend stub' = pooled log-power STFT frames projected by a fixed
+    random matrix."""
+    _, power = S.stft_chunks(jnp.asarray(chunks), cfg_audio)
+    feats = jnp.log1p(power)                          # (B, F, bins)
+    F = feats.shape[1] - feats.shape[1] % n_frames
+    feats = feats[:, :F].reshape(feats.shape[0], n_frames, -1,
+                                 feats.shape[-1]).mean(axis=2)
+    proj = jax.random.normal(jax.random.key(7),
+                             (feats.shape[-1], model_cfg.d_model)) * 0.05
+    return feats @ proj
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--dec-len", type=int, default=24)
+    args = ap.parse_args()
+
+    model_cfg = reduced(ARCHS["whisper-small"])
+    model = build_model(model_cfg)
+    opt = OptConfig(lr=3e-3, warmup_steps=10, decay_steps=args.steps)
+    params, opt_state = init_train_state(model, opt, jax.random.key(0))
+    step_fn = jax.jit(make_train_step(model, NULL_RULES, opt),
+                      donate_argnums=(0, 1))
+
+    rng = np.random.RandomState(0)
+    t0, losses = time.time(), []
+    for step in range(1, args.steps + 1):
+        # 1) preprocess a fresh minute of audio (early-exit pipeline)
+        audio, labels = generate_labelled(step, 12, segment_s=5.0)
+        S5 = audio.shape[-1]
+        lc = audio.reshape(1, 12, 2, S5).transpose(0, 2, 1, 3).reshape(
+            1, 2, 12 * S5)
+        cleaned, det, n_kept = preprocess_two_phase(SERF_AUDIO,
+                                                    jnp.asarray(lc))
+        if n_kept == 0:
+            continue
+        kept_labels = labels[np.asarray(det.keep)]
+        # 2) featurize survivors; batch up
+        idx = rng.choice(n_kept, size=args.batch)
+        frames = featurize(SERF_AUDIO, model_cfg, cleaned[idx])
+        # pseudo-transcripts keyed to the acoustic label
+        base = (kept_labels[idx][:, None] * 31 + 5).astype(np.int32)
+        toks = (base + np.arange(args.dec_len)[None, :] * 7) % \
+            model_cfg.vocab_size
+        batch = {"enc_frames": frames,
+                 "tokens": jnp.asarray(toks),
+                 "targets": jnp.asarray(toks)}
+        # 3) train
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % 10 == 0:
+            print(f"step {step:4d} kept {n_kept:2d}/12 chunks  "
+                  f"loss {losses[-1]:.3f}  "
+                  f"({step / (time.time() - t0):.2f} steps/s)", flush=True)
+    print(f"\nloss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({'LEARNED' if losses[-1] < losses[0] * 0.8 else 'check setup'})")
+
+
+if __name__ == "__main__":
+    main()

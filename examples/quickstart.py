@@ -1,0 +1,45 @@
+"""Quickstart: preprocess synthetic bird-acoustic audio through the paper's
+unified early-exit pipeline and print what each stage did.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SERF_AUDIO as cfg
+from repro.core.pipeline import preprocess_two_phase
+from repro.data.synthetic import generate_labelled, LABELS
+
+
+def main():
+    # 4 minutes of 44.1 kHz stereo audio with ground-truth labels
+    n_long = 4
+    audio, labels = generate_labelled(0, n_long * 12, segment_s=5.0)
+    S5 = audio.shape[-1]
+    long_chunks = (audio.reshape(n_long, 12, 2, S5).transpose(0, 2, 1, 3)
+                   .reshape(n_long, 2, 12 * S5))
+    print(f"input: {long_chunks.shape[0]} x 60 s stereo long chunks "
+          f"({long_chunks.nbytes / 2**20:.0f} MB)")
+    print("ground truth:",
+          {l: int((labels == i).sum()) for i, l in enumerate(LABELS)})
+
+    cleaned, det, n_kept = preprocess_two_phase(
+        cfg, jnp.asarray(long_chunks), pad_multiple=len(jax.devices()))
+
+    s = {k: float(v) for k, v in det.stats.items()}
+    print(f"\npipeline: split(60s) -> mono -> fused downsample+HPF -> "
+          f"split(15s) -> STFT once ->")
+    print(f"  rain detect      removed {s['frac_rain']:.1%}")
+    print(f"  cicada detect    band-stopped {s['frac_cicada15']:.1%} "
+          f"of 15 s chunks")
+    print(f"  split(5s) + silence detect removed {s['frac_silence']:.1%}")
+    print(f"  MMSE-STSA        ran on the {n_kept} survivors only "
+          f"({s['frac_kept']:.1%}) — the paper's early-exit economy")
+    print(f"\noutput: {cleaned.shape[0]} cleaned 5 s chunks @ "
+          f"{cfg.target_rate_hz / 1000:.2f} kHz, "
+          f"finite={np.isfinite(cleaned).all()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""Sharded, atomic, async checkpointing with restore-time resharding.
+
+Layout:  <dir>/step_<N>/
+            manifest.json   {leaf_path: {file, shape, dtype, crc32}, meta}
+            <leaf>.npy      raw array bytes (bf16 stored as uint16 view)
+         <dir>/step_<N>.tmp-*   while writing (atomic rename on completion)
+
+Restore is ELASTIC: arrays are materialized host-side and device_put with the
+*target* shardings — any saved mesh -> any restore mesh (grow/shrink), which
+is the restart path after node failure or resize. The training-data cursor
+(file index / chunk offset / rng key) rides in `meta`, so restart resumes the
+exact sample stream (the paper's "master re-sends work of crashed slaves",
+made exact).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _leaf_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = []
+    for kp, _ in flat:
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        names.append(_SEP.join(parts))
+    return names, [v for _, v in flat], treedef
+
+
+def _storage_view(arr: np.ndarray):
+    if arr.dtype == jnp.bfloat16:
+        return arr.view(np.uint16), "bfloat16"
+    return arr, str(arr.dtype)
+
+
+def _load_view(arr: np.ndarray, logical_dtype: str):
+    if logical_dtype == "bfloat16":
+        return arr.view(jnp.bfloat16)
+    return arr
+
+
+def save(directory, step, tree, meta=None, async_save=False):
+    """Checkpoint `tree` at `directory/step_<step>`. Returns a handle with
+    .wait() (no-op for sync saves)."""
+    final = os.path.join(directory, f"step_{step}")
+    os.makedirs(directory, exist_ok=True)
+    # snapshot to host BEFORE going async (training may mutate buffers)
+    names, leaves, _ = _leaf_paths(tree)
+    host_leaves = [np.asarray(jax.device_get(v)) for v in leaves]
+
+    def _write():
+        tmp = tempfile.mkdtemp(prefix=f"step_{step}.tmp-", dir=directory)
+        manifest = {"meta": meta or {}, "step": step, "leaves": {}}
+        for name, arr in zip(names, host_leaves):
+            stored, logical = _storage_view(arr)
+            fname = name.replace(_SEP, "__") + ".npy"
+            fpath = os.path.join(tmp, fname)
+            np.save(fpath, stored, allow_pickle=False)
+            with open(fpath, "rb") as f:
+                crc = zlib.crc32(f.read())
+            manifest["leaves"][name] = {
+                "file": fname, "shape": list(arr.shape), "dtype": logical,
+                "crc32": crc,
+            }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if async_save:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return _Handle(t)
+    _write()
+    return _Handle(None)
+
+
+class _Handle:
+    def __init__(self, thread):
+        self._thread = thread
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+
+
+def latest_step(directory):
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_", 1)[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and ".tmp" not in d]
+    return max(steps) if steps else None
+
+
+def restore(directory, step, like=None, shardings=None, verify_crc=True):
+    """Restore a checkpoint.
+
+    like: a pytree (of arrays or ShapeDtypeStructs) giving the structure; if
+    None, a flat {leaf_path: array} dict is returned.
+    shardings: optional pytree of NamedShardings (matching `like`) — arrays
+    are device_put with these, which is how restore RESHARDS onto a
+    different mesh (elastic restart)."""
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    def load_leaf(name):
+        ent = manifest["leaves"][name]
+        fpath = os.path.join(path, ent["file"])
+        if verify_crc:
+            with open(fpath, "rb") as f:
+                crc = zlib.crc32(f.read())
+            if crc != ent["crc32"]:
+                raise IOError(f"checkpoint corruption in {name}: crc mismatch")
+        arr = np.load(fpath, allow_pickle=False)
+        return _load_view(arr, ent["dtype"]).reshape(ent["shape"])
+
+    if like is None:
+        return ({n: load_leaf(n) for n in manifest["leaves"]},
+                manifest["meta"])
+
+    names, leaves, treedef = _leaf_paths(like)
+    missing = [n for n in names if n not in manifest["leaves"]]
+    if missing:
+        raise KeyError(f"checkpoint missing leaves: {missing[:5]}...")
+    arrays = [load_leaf(n) for n in names]
+    if shardings is not None:
+        shard_leaves = jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: x is None or hasattr(x, "spec"))
+        arrays = [a if s is None else jax.device_put(a, s)
+                  for a, s in zip(arrays, shard_leaves)]
+    else:
+        arrays = [jnp.asarray(a) for a in arrays]
+    return treedef.unflatten(arrays), manifest["meta"]
+
+
+def prune_old(directory, keep=3):
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(int(d.split("_", 1)[1]) for d in os.listdir(directory)
+                   if d.startswith("step_") and ".tmp" not in d)
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s}"), ignore_errors=True)

@@ -1,0 +1,15 @@
+from repro.configs.base import (
+    ModelConfig, ShapeConfig, SHAPES, cell_is_runnable, reduced,
+)
+from repro.configs.archs import ALL as ARCHS
+from repro.configs.serf_audio import SERF_AUDIO, AudioPipelineConfig
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def list_archs():
+    return sorted(ARCHS)

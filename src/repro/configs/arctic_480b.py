@@ -1,0 +1,2 @@
+"""Assigned architecture config (see archs.py for the dataclass)."""
+from repro.configs.archs import ARCTIC_480B as CONFIG

@@ -1,0 +1,2 @@
+"""Assigned architecture config (see archs.py for the dataclass)."""
+from repro.configs.archs import GEMMA_7B as CONFIG

@@ -1,0 +1,2 @@
+"""Assigned architecture config (see archs.py for the dataclass)."""
+from repro.configs.archs import GRANITE_MOE_3B as CONFIG

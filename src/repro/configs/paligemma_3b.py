@@ -1,0 +1,2 @@
+"""Assigned architecture config (see archs.py for the dataclass)."""
+from repro.configs.archs import PALIGEMMA_3B as CONFIG

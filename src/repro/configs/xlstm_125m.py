@@ -1,0 +1,2 @@
+"""Assigned architecture config (see archs.py for the dataclass)."""
+from repro.configs.archs import XLSTM_125M as CONFIG

@@ -1,0 +1,64 @@
+"""Work distribution for the early-exit pipeline — the paper's master-slave
+file management, made TPU-native.
+
+The paper's master tracks which files are deleted and never dispatches them
+to the expensive MMSE stage. On TPU the same economy comes from COMPACTION:
+survivors are packed dense (global stable argsort — XLA lowers the cross-
+device movement to all-to-alls), the host reads one scalar (survivor count)
+and dispatches the MMSE phase on a minimally-padded survivor batch. No
+central master owns the data path: the "master" role shrinks to a scalar
+readback + shape choice, removing the paper's single point of failure.
+
+Also provides the load-balance metrics reported in the paper (Figs 14-18).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def compact(chunks, keep):
+    """Pack surviving chunks to the front (stable order preserved).
+
+    chunks: (N, ...); keep: (N,) bool. Returns (packed chunks, packed keep,
+    survivor count)."""
+    order = jnp.argsort(~keep, stable=True)
+    return jnp.take(chunks, order, axis=0), keep[order], jnp.sum(keep)
+
+
+def shard_load(keep, n_shards):
+    """Per-shard surviving-chunk counts (N divisible by n_shards): the
+    paper's files-per-slave measurement."""
+    return jnp.sum(keep.reshape(n_shards, -1), axis=1)
+
+
+def balance_stats(keep, n_shards):
+    """Load-balance metrics (paper Figs 14-16: 'each slave processes almost
+    the same number of files').
+
+    'before' = survivors stay where detection left them (mask-only early
+    exit); 'after' = survivors are compacted AND re-sliced into a dense
+    batch of ceil(n/k) per shard (what survivor_batch dispatches) — the
+    residual imbalance is only the ceil-vs-mean padding."""
+    loads = shard_load(keep, n_shards)
+    mean = jnp.mean(loads.astype(jnp.float32))
+    imb = jnp.max(loads) / jnp.maximum(mean, 1e-9)
+    n = jnp.sum(keep)
+    per_shard_after = jnp.ceil(n / n_shards)
+    imb_after = per_shard_after / jnp.maximum(n / n_shards, 1e-9)
+    return {"loads": loads, "imbalance": imb,
+            "imbalance_after_compact": imb_after}
+
+
+def survivor_batch(chunks_np, keep_np, pad_multiple):
+    """Host-side ("master") re-batching of survivors for the MMSE phase:
+    pad survivor count up to a multiple of the device count so the phase-B
+    jit shards evenly. Returns (batch, n_real)."""
+    idx = np.nonzero(keep_np)[0]
+    n = len(idx)
+    if n == 0:
+        return None, 0
+    n_pad = -(-n // pad_multiple) * pad_multiple
+    sel = np.concatenate([idx, np.repeat(idx[-1:], n_pad - n)])
+    return chunks_np[sel], n

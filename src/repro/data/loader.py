@@ -1,0 +1,103 @@
+"""Host data pipeline: background-threaded, leased-queue-fed loaders with a
+deterministic, checkpointable cursor.
+
+Two instantiations of the same machinery (the paper's contribution is the
+scheduling, not the payload):
+  * AudioChunkLoader — yields (B, 2, S_long_src) long-chunk batches from the
+    synthetic SERF-like stream (examples/preprocess drivers).
+  * TokenLoader — yields {"tokens","targets"} LM batches (train drivers).
+
+Prefetch depth == the paper's slave queue size (Table 7 sweeps it). The
+cursor (next work id + RNG seed) rides in checkpoint meta for exact resume.
+"""
+from __future__ import annotations
+
+import queue as _q
+import threading
+
+import numpy as np
+
+from repro.data import synthetic
+from repro.data.queue import WorkQueue
+
+
+class _PrefetchLoader:
+    def __init__(self, make_item, n_items, prefetch=5, start_at=0):
+        self.make_item = make_item
+        if start_at:
+            self.queue = WorkQueue.from_state(
+                {"n_items": n_items, "done": list(range(start_at))})
+        else:
+            self.queue = WorkQueue(n_items)
+        self._buf = _q.Queue(maxsize=prefetch)
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._started = False
+
+    def _run(self):
+        while True:
+            ids = self.queue.lease("loader", max_items=1)
+            if not ids:
+                self._buf.put(None)
+                return
+            wid = ids[0]
+            item = self.make_item(wid)
+            self._buf.put((wid, item))
+
+    def __iter__(self):
+        if not self._started:
+            self._thread.start()
+            self._started = True
+        while True:
+            got = self._buf.get()
+            if got is None:
+                return
+            wid, item = got
+            yield wid, item
+            self.queue.complete([wid])
+
+    def cursor(self):
+        return self.queue.state()
+
+
+class AudioChunkLoader(_PrefetchLoader):
+    """Batches of 60 s long chunks, built from 12 x 5 s labelled segments."""
+
+    def __init__(self, seed=0, n_batches=100, batch_long_chunks=4,
+                 prefetch=5, start_at=0, segment_s=5.0, rate=44_100):
+        self.seed = seed
+        self.rate = rate
+        self.segment_s = segment_s
+        self.batch_long = batch_long_chunks
+        self.per_long = int(round(60.0 / segment_s))
+
+        def make(wid):
+            audio, labels = synthetic.generate_labelled(
+                seed * 100_003 + wid, self.batch_long * self.per_long,
+                segment_s=segment_s, rate=rate)
+            S5 = audio.shape[-1]
+            chunks = audio.reshape(self.batch_long, self.per_long, 2, S5)
+            chunks = chunks.transpose(0, 2, 1, 3).reshape(
+                self.batch_long, 2, self.per_long * S5)
+            return chunks, labels
+
+        super().__init__(make, n_batches, prefetch, start_at)
+
+
+class TokenLoader(_PrefetchLoader):
+    """Synthetic-corpus LM batches: Zipf-distributed tokens with structure
+    (repeated n-grams) so losses move during the example training runs."""
+
+    def __init__(self, vocab_size, batch, seq_len, n_batches=10_000,
+                 seed=0, prefetch=5, start_at=0):
+        self.vocab_size = vocab_size
+
+        def make(wid):
+            rng = np.random.RandomState(seed * 99_991 + wid)
+            a = rng.zipf(1.3, size=(batch, seq_len + 1)) % vocab_size
+            # inject copyable structure: second half repeats the first
+            half = seq_len // 2
+            a[:, half:2 * half] = a[:, :half]
+            a = a.astype(np.int32)
+            return {"tokens": a[:, :-1], "targets": a[:, 1:]}
+
+        super().__init__(make, n_batches, prefetch, start_at)

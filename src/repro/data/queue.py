@@ -1,0 +1,97 @@
+"""Host-side work queue: the paper's master-slave dispatch, made fault-
+tolerant and decentralized-friendly.
+
+The paper: master holds a file list; slaves pull when their local queue drops
+below `max_queue_size`; master tracks sent/completed files and re-sends work
+of crashed slaves; slaves return results every `send_interval`.
+
+Here: a LEASED work queue. Workers lease chunk ranges (leases carry
+deadlines); completed leases retire work; expired leases (crash, straggler)
+return work to the queue automatically. The queue state is tiny and is
+checkpointed with the training state (ckpt meta), so a restart resumes the
+exact stream — no loss, no duplication beyond at-least-once redelivery.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Lease:
+    work_id: int
+    worker: str
+    deadline: float
+
+
+class WorkQueue:
+    def __init__(self, n_items, lease_timeout_s=60.0, clock=time.monotonic):
+        self.n_items = n_items
+        self.lease_timeout_s = lease_timeout_s
+        self.clock = clock
+        self._pending = list(range(n_items - 1, -1, -1))   # stack, pop() = 0..
+        self._leases: dict[int, Lease] = {}
+        self._done = set()
+        self.redeliveries = 0
+
+    # -- worker API ---------------------------------------------------------
+    def lease(self, worker, max_items=1):
+        """Lease up to max_items work ids (the slave's pull request)."""
+        self._reap_expired()
+        out = []
+        while self._pending and len(out) < max_items:
+            wid = self._pending.pop()
+            self._leases[wid] = Lease(wid, worker,
+                                      self.clock() + self.lease_timeout_s)
+            out.append(wid)
+        return out
+
+    def complete(self, work_ids):
+        for wid in work_ids:
+            self._leases.pop(wid, None)
+            self._done.add(wid)
+
+    def heartbeat_extend(self, worker):
+        now = self.clock()
+        for lease in self._leases.values():
+            if lease.worker == worker:
+                lease.deadline = now + self.lease_timeout_s
+
+    # -- failure handling ---------------------------------------------------
+    def _reap_expired(self):
+        now = self.clock()
+        expired = [wid for wid, l in self._leases.items() if l.deadline < now]
+        for wid in expired:
+            del self._leases[wid]
+            self._pending.append(wid)
+            self.redeliveries += 1
+
+    def fail_worker(self, worker):
+        """Immediately return a dead worker's leases (heartbeat said dead)."""
+        back = [wid for wid, l in self._leases.items() if l.worker == worker]
+        for wid in back:
+            del self._leases[wid]
+            self._pending.append(wid)
+            self.redeliveries += 1
+        return back
+
+    # -- checkpoint ---------------------------------------------------------
+    def state(self):
+        self._reap_expired()
+        return {"n_items": self.n_items, "done": sorted(self._done)}
+
+    @classmethod
+    def from_state(cls, state, **kw):
+        q = cls(state["n_items"], **kw)
+        done = set(state["done"])
+        q._done = done
+        q._pending = [i for i in range(state["n_items"] - 1, -1, -1)
+                      if i not in done]
+        return q
+
+    @property
+    def finished(self):
+        return len(self._done) == self.n_items
+
+    def progress(self):
+        return len(self._done), self.n_items

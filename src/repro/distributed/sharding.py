@@ -1,0 +1,137 @@
+"""Logical-axis sharding rules.
+
+Models/optimizers never mention mesh axes directly; they use logical names.
+Rules map logical -> mesh axes per sharding mode; anything not in the mesh is
+dropped (so the same model code runs on a 1-device CPU test, a (16,16) pod, or
+a (2,16,16) multi-pod mesh).
+
+Modes
+  tp       : batch over (pod,data); fused feature dims (q_dim/kv_dim/ff/vocab/
+             experts) over model; weights' d_model replicated.
+  fsdp_tp  : tp + weights/optimizer d_model ("embed") dim sharded over data
+             (ZeRO-3-style; GSPMD inserts the fwd all-gathers / bwd
+             reduce-scatters). Needed for arctic-480b training to fit HBM.
+
+Decode overrides: long-context cells re-map kv_seq -> (data,) or (data,model)
+and batch -> () via `overrides`.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axes (filtered by what the mesh provides)
+_TABLES = {
+    "tp": {
+        "batch": ("pod", "data"),
+        "seq": (),
+        "embed": (),            # residual d_model: replicated
+        "q_dim": ("model",),    # fused num_heads*head_dim
+        "kv_dim": ("model",),
+        "heads": ("model",),    # only used where head count divides
+        "kv_heads": (),
+        "ff": ("model",),
+        "vocab": ("model",),
+        "experts": ("model",),
+        "expert_ff": (),
+        # activation-side axes (distinct from the weight-side names so modes
+        # like zero3 can shard batch over "model" without duplicate specs)
+        "act_q": ("model",),
+        "act_kv": ("model",),
+        "act_ff": ("model",),
+        "act_vocab": ("model",),
+        "act_experts": ("model",),
+        "act_expert_ff": (),
+        "kv_seq": (),
+        "conv": (),
+        "state": (),
+        # weight-side d_model (first dim of most projection matrices)
+        "w_embed": (),
+        # audio pipeline
+        "chunks": ("pod", "data", "model"),   # pure data parallel over all devices
+        "samples": (),
+        "bins": (),
+    },
+}
+_TABLES["fsdp_tp"] = dict(_TABLES["tp"], w_embed=("pod", "data"),
+                          expert_ff=())
+# zero3: pure data parallelism over the whole pod with ZeRO-3 weight
+# sharding — batch over every axis, weights/optimizer sharded on their
+# feature dims, activations never all-reduced (the hillclimb profile for
+# collective-bound small-model train cells; see EXPERIMENTS.md §Perf).
+_TABLES["zero3"] = dict(
+    _TABLES["tp"],
+    batch=("pod", "data", "model"),
+    w_embed=("data",),
+    act_q=(), act_kv=(), act_ff=(), act_vocab=(), act_experts=(),
+    act_expert_ff=(),
+)
+# sp_ep: SEQUENCE-PARALLEL residual stream (seq -> model axis) with
+# replicated-compute attention/MLP weights (fsdp-stored, gathered per layer)
+# and expert-parallel MoE. Every norm/matmul/softmax is local to a seq
+# shard; the only collectives are the per-layer KV + weight gathers and the
+# MoE all-to-all pair. Fixes the per-block all-reduce storm GSPMD emits for
+# uneven kv_heads (arctic hillclimb, EXPERIMENTS.md §Perf iter 2/3).
+_TABLES["sp_ep"] = dict(
+    _TABLES["fsdp_tp"],
+    seq=("model",), seq_cp=("model",),
+    q_dim=(), kv_dim=(), ff=(), vocab=(),
+    act_q=(), act_kv=(), act_ff=(), act_vocab=(),
+)
+for _t in ("tp", "fsdp_tp", "zero3"):
+    _TABLES[_t]["seq_cp"] = ()
+
+
+class ShardingRules:
+    def __init__(self, mesh: Mesh | None = None, mode: str = "tp",
+                 overrides: dict | None = None):
+        if mode not in _TABLES:
+            raise KeyError(f"unknown sharding mode {mode!r}")
+        self.mesh = mesh
+        self.mode = mode
+        table = dict(_TABLES[mode])
+        if overrides:
+            table.update(overrides)
+        self._table = table
+        self._mesh_axes = set(mesh.axis_names) if mesh is not None else set()
+
+    def _resolve(self, name):
+        if name is None:
+            return None
+        axes = tuple(a for a in self._table[name] if a in self._mesh_axes)
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    def spec(self, *axes) -> P:
+        """PartitionSpec from logical axis names (None = replicated dim)."""
+        return P(*(self._resolve(a) for a in axes))
+
+    def sharding(self, *axes) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*axes))
+
+    def constrain(self, x, *axes):
+        """with_sharding_constraint; no-op without a mesh (CPU unit tests)."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.sharding(*axes))
+
+
+NULL_RULES = ShardingRules(mesh=None)
+
+
+def _is_spec_leaf(v):
+    """A spec leaf is a (possibly empty) tuple of logical names/None —
+    tuples of tuples (e.g. xLSTM state tuples) recurse instead."""
+    return isinstance(v, tuple) and all(
+        e is None or isinstance(e, str) for e in v)
+
+
+def tree_shardings(rules: ShardingRules, spec_tree):
+    """Map a pytree of logical-axis tuples to NamedShardings (or None)."""
+    if rules.mesh is None:
+        return None
+    return jax.tree.map(lambda axes: rules.sharding(*axes),
+                        spec_tree, is_leaf=_is_spec_leaf)

@@ -1,0 +1,97 @@
+"""Fault-tolerance primitives: heartbeat failure detection, straggler
+detection (backup-task rule), elastic mesh re-planning.
+
+These run on the launcher/host side; clocks are injectable so the logic is
+unit-testable without wall-time sleeps. The paper's master "re-sends files to
+different slaves if a slave disconnects or crashes" — here that becomes:
+heartbeat timeout -> worker marked dead -> its queue lease is returned (see
+data/queue.py) -> elastic planner recomputes the mesh if capacity changed ->
+training restarts from the last checkpoint with restore-time resharding.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+
+class HeartbeatMonitor:
+    def __init__(self, timeout_s=30.0, clock=time.monotonic):
+        self.timeout_s = timeout_s
+        self.clock = clock
+        self._last = {}
+
+    def beat(self, worker_id):
+        self._last[worker_id] = self.clock()
+
+    def alive(self):
+        now = self.clock()
+        return {w for w, t in self._last.items()
+                if now - t <= self.timeout_s}
+
+    def dead(self):
+        now = self.clock()
+        return {w for w, t in self._last.items() if now - t > self.timeout_s}
+
+
+class StragglerDetector:
+    """Backup-task rule: a task is a straggler if it has run longer than
+    `factor` x the rolling p95 of completed-task latencies (min history
+    before firing). Mirrors the paper's observation that even load needs
+    re-dispatch when a slave slows down."""
+
+    def __init__(self, factor=2.0, min_history=20, clock=time.monotonic):
+        self.factor = factor
+        self.min_history = min_history
+        self.clock = clock
+        self._latencies = []
+        self._inflight = {}
+
+    def start(self, task_id):
+        self._inflight[task_id] = self.clock()
+
+    def complete(self, task_id):
+        t0 = self._inflight.pop(task_id, None)
+        if t0 is not None:
+            self._latencies.append(self.clock() - t0)
+            if len(self._latencies) > 1000:
+                self._latencies = self._latencies[-500:]
+
+    def p95(self):
+        if not self._latencies:
+            return float("inf")
+        xs = sorted(self._latencies)
+        return xs[min(len(xs) - 1, int(0.95 * len(xs)))]
+
+    def stragglers(self):
+        if len(self._latencies) < self.min_history:
+            return []
+        limit = self.factor * self.p95()
+        now = self.clock()
+        return [t for t, t0 in self._inflight.items() if now - t0 > limit]
+
+
+@dataclass
+class MeshPlan:
+    shape: tuple
+    axes: tuple
+    reason: str = ""
+
+
+def plan_mesh(n_devices, model_parallel=16, multi_pod_size=256):
+    """Elastic mesh planning: keep TP fixed (weights shard cleanly at 16),
+    flex the data axis, add the pod axis above one pod's worth of chips.
+
+    Degrades gracefully: if n_devices isn't divisible, the largest usable
+    subset is planned (the launcher drops the spare hosts)."""
+    tp = model_parallel
+    if n_devices < tp:                  # tiny fleets: shrink TP instead
+        tp = 1 << (n_devices.bit_length() - 1)
+    usable = (n_devices // tp) * tp
+    dp = usable // tp
+    if usable > multi_pod_size and usable % multi_pod_size == 0:
+        pods = usable // multi_pod_size
+        per_pod_dp = multi_pod_size // tp
+        return MeshPlan((pods, per_pod_dp, tp), ("pod", "data", "model"),
+                        f"{pods} pods x ({per_pod_dp}x{tp})")
+    return MeshPlan((dp, tp), ("data", "model"),
+                    f"single pod {dp}x{tp}, {n_devices - usable} spare")

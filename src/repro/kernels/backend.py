@@ -1,0 +1,60 @@
+"""Kernel execution backend selection.
+
+Modes:
+  auto      — TPU: compiled pallas_call; CPU: the pure-jnp ref path (XLA-
+              compiled, fast). This is the production default: interpret-mode
+              Pallas executes the kernel body in Python per grid step and is
+              a correctness tool, not an execution engine.
+  pallas    — force pallas_call (compiled on TPU, interpret on CPU).
+  interpret — force interpret-mode pallas_call (kernel correctness tests).
+  ref       — force the jnp oracle.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+
+import jax
+
+_MODE = os.environ.get("REPRO_KERNEL_BACKEND", "auto")
+_VALID = ("auto", "pallas", "interpret", "ref", "matmul")
+
+
+def set_mode(mode: str):
+    global _MODE
+    if mode not in _VALID:
+        raise ValueError(f"mode {mode!r} not in {_VALID}")
+    _MODE = mode
+
+
+def get_mode() -> str:
+    return _MODE
+
+
+@contextlib.contextmanager
+def use(mode: str):
+    prev = _MODE
+    set_mode(mode)
+    try:
+        yield
+    finally:
+        set_mode(prev)
+
+
+def resolve() -> tuple[bool, bool]:
+    """Returns (use_pallas, interpret)."""
+    on_tpu = jax.default_backend() == "tpu"
+    mode = _MODE
+    if mode == "auto":
+        return (True, False) if on_tpu else (False, False)
+    if mode == "pallas":
+        return True, not on_tpu
+    if mode == "interpret":
+        return True, True
+    return False, False
+
+
+def matmul_dft() -> bool:
+    """True when the SPMD-partitionable matmul-DFT path should replace the
+    XLA FFT op (mode "matmul"; used by the dry-run — see stft ref.py)."""
+    return _MODE == "matmul"

@@ -1,0 +1,29 @@
+"""Public wrappers for the FIR kernel: high-pass and fused
+band-pass + decimate (the pipeline's downsample+HPF stage).
+
+Backend dispatch per repro.kernels.backend; plain functions, composable
+inside jit.
+"""
+from repro.kernels import backend
+from repro.kernels.fir_hpf import kernel as K
+from repro.kernels.fir_hpf import ref as R
+
+
+def highpass(x, cutoff_hz=1000.0, rate_hz=22_050, n_taps=129):
+    """1 kHz high-pass at the working rate. x: (B,S) -> (B,S)."""
+    use_pallas, interp = backend.resolve()
+    taps = R.highpass_taps(cutoff_hz, rate_hz, n_taps)
+    if not use_pallas:
+        return R.fir_ref(x, taps, 1)
+    return K.fir_pallas(x, taps, stride=1, interpret=interp)
+
+
+def bandpass_decimate(x, f_lo_hz=1000.0, f_hi_hz=11_025.0, rate_hz=44_100,
+                      factor=2, n_taps=129):
+    """Fused anti-alias + high-pass + decimate. x: (B,S) @rate ->
+    (B, S//factor) @rate/factor, band-limited to [f_lo, f_hi]."""
+    use_pallas, interp = backend.resolve()
+    taps = R.bandpass_decimate_taps(f_lo_hz, f_hi_hz, rate_hz, n_taps)
+    if not use_pallas:
+        return R.fir_ref(x, taps, factor)
+    return K.fir_pallas(x, taps, stride=factor, interpret=interp)

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: fused framing + Hamming window + real-DFT-as-matmul.
+
+TPU adaptation of the paper's FFT stage (Apache Commons radix FFT on CPU):
+a 256-point real DFT is a (frames x 256) @ (256 x 2*bins) matmul — MXU-native,
+no butterfly/bit-reversal (which would serialize on a systolic array).
+
+Framing exploits the 50% overlap: within a tile's contiguous sample span, the
+even frames are one contiguous reshape and the odd frames a hop-shifted
+reshape — no gathers inside the kernel. Because Pallas blocked indexing cannot
+express *overlapping* blocks, each grid step receives its (FRAME_TILE*hop)
+main span plus a (window-hop) boundary tail (precomputed view, ops.py).
+
+Grid: (batch, frame_tiles). VMEM per step:
+  main span (1,1,32768) f32  = 128 KiB      (FRAME_TILE=256, hop=128)
+  tail      (1,1,128)        = 0.5 KiB
+  dft basis (256,384)        = 384 KiB      (grid-invariant, stays resident)
+  out       (1,256,384)      = 384 KiB
+MXU alignment: contraction dim 256 and padded output dim 384 are multiples of
+the 128-lane tiling.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.stft_dft.ref import hamming
+
+FRAME_TILE = 128   # block-shape hillclimb: 256 -> 128 cuts pad waste ~4.5%
+                   # and halves the per-step VMEM footprint (EXPERIMENTS §Perf)
+PAD_OUT = 384          # 2*(128+1) = 258 -> padded to 3*128
+
+
+def dft_basis(window=256, dtype=jnp.float32, windowed=True):
+    """Packed real-DFT basis (window, PAD_OUT): [cos | -sin | zero-pad].
+
+    With windowed=True the Hamming window is folded into the basis rows
+    (diag(w) @ basis), fusing the windowing into the DFT matmul."""
+    bins = window // 2 + 1
+    n = np.arange(window)[:, None]
+    k = np.arange(bins)[None, :]
+    ang = 2.0 * np.pi * n * k / window
+    basis = np.zeros((window, PAD_OUT), np.float32)
+    basis[:, :bins] = np.cos(ang)
+    basis[:, bins:2 * bins] = -np.sin(ang)
+    if windowed:
+        basis *= hamming(window)[:, None]
+    return jnp.asarray(basis, dtype)
+
+
+def _stft_kernel(x_ref, tail_ref, basis_ref, o_ref, *, window, hop,
+                 frame_tile):
+    span = jnp.concatenate([x_ref[0, 0], tail_ref[0, 0]])   # (T*hop + w-hop,)
+    half = frame_tile // 2
+    even = span[:half * window].reshape(half, window)
+    odd = span[hop:hop + half * window].reshape(half, window)
+    frames = jnp.stack([even, odd], axis=1).reshape(frame_tile, window)
+    o_ref[0] = jnp.dot(frames, basis_ref[...],
+                       preferred_element_type=jnp.float32)
+
+
+def stft_pallas(x, window=256, hop=128, interpret=False):
+    """x: (B, S) f32, S = n_tiles*FRAME_TILE*hop + (window-hop)
+    -> (B, F, PAD_OUT) packed [re | im | pad], F = n_tiles*FRAME_TILE."""
+    assert hop * 2 == window, "kernel exploits 50% overlap"
+    B, S = x.shape
+    tile_span = FRAME_TILE * hop
+    tail_len = window - hop
+    assert (S - tail_len) % tile_span == 0, (
+        f"S={S} must be n*{tile_span}+{tail_len} (ops.py pads)")
+    n_tiles = (S - tail_len) // tile_span
+    F = n_tiles * FRAME_TILE
+    main = x[:, :n_tiles * tile_span].reshape(B, n_tiles, tile_span)
+    tail_idx = (np.arange(n_tiles)[:, None] * tile_span + tile_span
+                + np.arange(tail_len)[None, :])
+    tails = x[:, tail_idx.reshape(-1)].reshape(B, n_tiles, tail_len)
+    basis = dft_basis(window, jnp.float32)
+
+    kernel = functools.partial(_stft_kernel, window=window, hop=hop,
+                               frame_tile=FRAME_TILE)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, 1, tile_span), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, 1, tail_len), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((window, PAD_OUT), lambda b, t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, FRAME_TILE, PAD_OUT),
+                               lambda b, t: (b, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, F, PAD_OUT), jnp.float32),
+        interpret=interpret,
+    )(main.astype(jnp.float32), tails.astype(jnp.float32), basis)
+    return out

@@ -1,0 +1,417 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct stand-ins (no allocation), record memory_analysis,
+cost_analysis, and the parsed collective schedule for the roofline.
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count on first init) — do not move it.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse     # noqa: E402
+import json         # noqa: E402
+import re           # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp                                   # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import (get_config, list_archs, SHAPES,                # noqa: E402
+                           cell_is_runnable)
+from repro.models.zoo import build_model, WHISPER_ENC_LEN  # noqa: E402
+from repro.distributed.sharding import ShardingRules, tree_shardings  # noqa: E402
+from repro.launch.mesh import make_production_mesh         # noqa: E402
+from repro.train.train_step import (make_train_step, train_state_specs)  # noqa: E402
+from repro.train.optimizer import OptConfig, init_opt_state  # noqa: E402
+
+# ----------------------------------------------------------- input specs
+def input_specs(cfg, shape):
+    """ShapeDtypeStruct stand-ins for every model input of the cell —
+    weak-type-correct, shardable, no device allocation."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if shape.kind == "train":
+            batch["targets"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cfg.num_prefix_tokens:
+            batch["prefix"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_prefix_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.is_enc_dec:
+            batch["enc_frames"] = jax.ShapeDtypeStruct(
+                (B, WHISPER_ENC_LEN, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one new token against a seq_len cache
+    return {"tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def batch_spec_tree(cfg, shape, rules):
+    if shape.kind in ("train", "prefill"):
+        spec = {"tokens": rules.sharding("batch", None)}
+        if shape.kind == "train":
+            spec["targets"] = rules.sharding("batch", None)
+        if cfg.num_prefix_tokens:
+            spec["prefix"] = rules.sharding("batch", None, None)
+        if cfg.is_enc_dec:
+            spec["enc_frames"] = rules.sharding("batch", None, None)
+        return spec
+    return {"tokens": rules.sharding("batch"), "pos": rules.sharding()}
+
+
+def decode_overrides(cfg, shape):
+    """Sharding-rule overrides for decode cells (DESIGN.md §5): KV caches are
+    sequence-sharded so every arch shards evenly regardless of kv_heads;
+    batch=1 long-context replicates batch and spreads seq over both axes."""
+    if shape.name == "long_500k":
+        return {"batch": (), "kv_seq": ("data", "model"),
+                "heads": ("model",)}
+    return {"kv_seq": ("model",), "heads": ()}
+
+
+# ------------------------------------------------- collective-bytes parsing
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+                "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+                "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16}
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype, dims):
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text):
+    """Sum per-device collective wire bytes from post-SPMD HLO.
+
+    Ring-model byte multipliers per op result size R with group size n:
+      all-gather:        R * (n-1)/n      (R = gathered result)
+      all-reduce:        2R * (n-1)/n
+      reduce-scatter:    R * (n-1)         (R = scattered result, in = R*n)
+      all-to-all:        R * (n-1)/n
+      collective-permute R
+    """
+    per_op = {}
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        _, dtype, dims, op = m.groups()
+        nbytes = _shape_bytes(dtype, dims)
+        n = 1
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = len(g.group(1).split(","))
+        else:
+            g2 = _GROUPS_IOTA_RE.search(line)
+            if g2:
+                n = int(g2.group(2))
+        if n <= 1:
+            continue
+        if op == "all-gather":
+            b = nbytes * (n - 1) / n
+        elif op == "all-reduce":
+            b = 2.0 * nbytes * (n - 1) / n
+        elif op == "reduce-scatter":
+            b = nbytes * (n - 1)
+        elif op == "all-to-all":
+            b = nbytes * (n - 1) / n
+        else:
+            b = float(nbytes)
+        per_op[op] = per_op.get(op, 0.0) + b
+        total += b
+    return total, per_op
+
+
+# ----------------------------------------------- the paper's own workload
+def lower_audio_cell(mesh, mesh_name, variant="fused", n_chunks=512):
+    """Lower the SERF preprocessing pipeline itself as a dry-run cell.
+
+    variant:
+      fused     — detection + masked MMSE on ALL chunks (no early exit —
+                  the paper's baseline)
+      detect    — detection phase only (phase A of the paper's early exit)
+      mmse45    — MMSE phase on a 45% survivor batch (phase B; 0.45 is the
+                  measured mean survivor fraction)
+    """
+    from repro.configs import SERF_AUDIO
+    from repro.core.pipeline import detection_phase, preprocess_fused, \
+        mmse_phase
+    from repro.kernels import backend
+    cfg = SERF_AUDIO
+    rules = ShardingRules(mesh)
+    t0 = time.time()
+    S60 = int(12 * 5.0 * cfg.source_rate_hz)
+    # matmul-DFT path: the TPU-target computation shape (MXU DFT), and the
+    # only SPMD-partitionable one (XLA's FFT op forces all-gathers)
+    with backend.use("matmul"):
+        if variant in ("fused", "detect"):
+            x = jax.ShapeDtypeStruct((n_chunks, 2, S60), jnp.float32)
+            fn = (lambda a: preprocess_fused(cfg, a, rules)) if variant == \
+                "fused" else (lambda a: detection_phase(cfg, a, rules))
+            sh = rules.sharding("chunks", None, None)
+            lowered = jax.jit(fn, in_shardings=(sh,)).lower(x)
+        else:
+            n5 = int(round(n_chunks * 12 * 0.45))
+            n5 -= n5 % mesh.devices.size
+            w = jax.ShapeDtypeStruct((n5, cfg.final_split_samples),
+                                     jnp.float32)
+            lowered = jax.jit(lambda a: mmse_phase(cfg, a, rules),
+                              in_shardings=(rules.sharding("chunks", None),)
+                              ).lower(w)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+    from repro.launch.hlo_analysis import analyze_hlo
+    walk = analyze_hlo(compiled.as_text())
+    audio_s = n_chunks * 60.0
+    return {
+        "arch": "serf-audio", "shape": f"pipeline_{variant}",
+        "mesh": mesh_name, "kind": "pipeline", "mode": "dp",
+        "microbatches": None, "n_devices": int(mesh.devices.size),
+        "audio_hours": audio_s / 3600.0,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_device": walk["dot_flops"],
+        "bytes_per_device": walk["dot_bytes"],
+        "collective_bytes_per_device": walk["coll_bytes"],
+        "collectives_by_op": walk["coll_by_op"],
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_estimate_gb": round(
+                (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                 + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30,
+                3),
+        },
+        # "useful" work = the paper's two-phase cost: detection on all
+        # chunks + MMSE on the measured survivor fraction (0.45)
+        "model_flops": None,
+    }
+
+
+# ------------------------------------------------------------- cell lowering
+def lower_cell(arch, shape_name, mesh, mesh_name, opt_cfg=None,
+               num_microbatches=1, mode=None, q_block=None, kv_block=None):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    runnable, why = cell_is_runnable(cfg, shape)
+    if not runnable:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "skipped": why}
+    if mode is not None:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, sharding_mode=mode,
+                                  train_sharding_mode=mode)
+    used_mode = cfg.sharding_mode
+    model = build_model(cfg)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        train_mode = cfg.train_sharding_mode or cfg.sharding_mode
+        if cfg.train_microbatches:
+            num_microbatches = cfg.train_microbatches
+        rules = ShardingRules(mesh, train_mode)
+        # zero3-style modes shard batch over every axis; fall back when the
+        # global batch doesn't divide (e.g. 256 over a 512-chip multi-pod)
+        bt_axes = [a for a in rules._table["batch"] if a in mesh.shape]
+        bt = 1
+        for a in bt_axes:
+            bt *= mesh.shape[a]
+        if shape.global_batch % max(bt, 1):
+            train_mode = cfg.sharding_mode
+            rules = ShardingRules(mesh, train_mode)
+        used_mode = train_mode
+        opt_cfg = opt_cfg or OptConfig(quantize_state=cfg.quantize_opt_state)
+        p_struct = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+        o_struct = jax.eval_shape(
+            lambda p: init_opt_state(opt_cfg, p), p_struct)
+        pspecs, ospecs = train_state_specs(model, opt_cfg)
+        p_sh = tree_shardings(rules, pspecs)
+        o_sh = tree_shardings(rules, ospecs)
+        b_struct = input_specs(cfg, shape)
+        b_sh = batch_spec_tree(cfg, shape, rules)
+        step = make_train_step(model, rules, opt_cfg,
+                               num_microbatches=num_microbatches)
+        lowered = jax.jit(
+            step, in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),
+        ).lower(p_struct, o_struct, b_struct)
+    elif shape.kind == "prefill":
+        rules = ShardingRules(mesh, cfg.sharding_mode)
+        p_struct = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+        p_sh = tree_shardings(rules, model.param_specs())
+        b_struct = input_specs(cfg, shape)
+        b_sh = batch_spec_tree(cfg, shape, rules)
+        fn = lambda p, b: model.prefill(p, b, rules)   # noqa: E731
+        lowered = jax.jit(fn, in_shardings=(p_sh, b_sh)).lower(
+            p_struct, b_struct)
+    else:  # decode
+        rules = ShardingRules(mesh, cfg.sharding_mode,
+                              overrides=decode_overrides(cfg, shape))
+        p_struct = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+        p_sh = tree_shardings(rules, model.param_specs())
+        kwargs = {"enc_len": WHISPER_ENC_LEN} if cfg.is_enc_dec else {}
+        c_struct = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                     **kwargs))
+        c_sh = tree_shardings(rules, model.cache_specs())
+        ins = input_specs(cfg, shape)
+        t_sh = batch_spec_tree(cfg, shape, rules)
+
+        def serve_step(params, caches, tokens, pos):
+            return model.decode_step(params, caches, tokens, pos, rules)
+
+        lowered = jax.jit(
+            serve_step,
+            in_shardings=(p_sh, c_sh, t_sh["tokens"], t_sh["pos"]),
+            donate_argnums=(1,),
+        ).lower(p_struct, c_struct, ins["tokens"], ins["pos"])
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll_bytes, coll_by_op = parse_collectives(hlo)
+    # trip-count-aware walk (cost_analysis counts scan bodies once — see
+    # hlo_analysis.py); these are the roofline inputs
+    from repro.launch.hlo_analysis import analyze_hlo
+    walk = analyze_hlo(hlo)
+    n_dev = mesh.devices.size
+    pc = cfg.param_counts()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = {"train": 6, "prefill": 2, "decode": 2}[shape.kind]
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind,
+        "mode": (used_mode if shape.kind == "train" else cfg.sharding_mode),
+        "microbatches": num_microbatches if shape.kind == "train" else None,
+        "n_devices": int(n_dev),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_device": walk["dot_flops"],
+        "bytes_per_device": walk["dot_bytes"],
+        "collective_bytes_per_device": walk["coll_bytes"],
+        "collectives_by_op": walk["coll_by_op"],
+        # raw XLA numbers (scan bodies counted once) kept for reference
+        "xla_flops_per_device": ca.get("flops", 0.0),
+        "xla_bytes_per_device": ca.get("bytes accessed", 0.0),
+        "flat_collective_bytes": coll_bytes,
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_estimate_gb": round(
+                (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                 + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30,
+                3),
+        },
+        "model_params_total": pc["total"],
+        "model_params_active": pc["active"],
+        "model_flops": mult * pc["active"] * tokens,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=4,
+                    help="grad-accum microbatches for train cells (mb=1 overflows HBM for the larger archs — see EXPERIMENTS.md)")
+    ap.add_argument("--mode", default=None,
+                    help="override sharding mode (tp|fsdp_tp|zero3)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh()))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16",
+                       make_production_mesh(multi_pod=True)))
+
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+
+    results = []
+    for mesh_name, mesh in meshes:
+        if args.all:
+            # the paper's own workload, as dry-run cells
+            for variant in ("fused", "detect", "mmse45"):
+                try:
+                    with mesh:
+                        rec = lower_audio_cell(mesh, mesh_name, variant)
+                    print(f"OK   serf-audio x {variant} x {mesh_name}: "
+                          f"flops/dev {rec['flops_per_device']:.3e} "
+                          f"coll/dev "
+                          f"{rec['collective_bytes_per_device']:.3e}",
+                          flush=True)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": "serf-audio", "shape": variant,
+                           "mesh": mesh_name,
+                           "error": f"{type(e).__name__}: {e}"}
+                    print(f"FAIL serf-audio x {variant}: {rec['error']}",
+                          flush=True)
+                results.append(rec)
+        for arch in archs:
+            for shape_name in shapes:
+                tag = f"{arch} x {shape_name} x {mesh_name}"
+                try:
+                    with mesh:
+                        rec = lower_cell(arch, shape_name, mesh, mesh_name,
+                                         num_microbatches=args.microbatches,
+                                         mode=args.mode)
+                    if "skipped" in rec:
+                        print(f"SKIP {tag}: {rec['skipped']}", flush=True)
+                    else:
+                        print(f"OK   {tag}: compile {rec['compile_s']}s "
+                              f"flops/dev {rec['flops_per_device']:.3e} "
+                              f"coll/dev {rec['collective_bytes_per_device']:.3e} "
+                              f"peak {rec['memory']['peak_estimate_gb']} GB",
+                              flush=True)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    print(f"FAIL {tag}: {rec['error']}", flush=True)
+                results.append(rec)
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out if args.out.endswith(".json")
+                  else args.out + ".json", "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {len(results)} records")
+    n_fail = sum(1 for r in results if "error" in r)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,241 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's `compiled.cost_analysis()` counts each computation ONCE — a lax.scan
+(while loop) body executed L times is undercounted by L (verified in
+tests/test_hlo_analysis.py). Since every layer stack, attention block loop,
+SSD chunk loop and microbatch loop in this framework is a scan, we walk the
+post-SPMD scheduled HLO text ourselves:
+
+  * dot ops        -> FLOPs (2 * prod(out dims) * contracted sizes) and
+                      stream bytes (lhs + rhs + out), operand shapes resolved
+                      through a per-computation symbol table (scheduled HLO
+                      does not print operand shapes inline)
+  * collectives    -> ring-model wire bytes (group size from replica_groups)
+  * while loops    -> body/cond costs multiplied by the trip count recovered
+                      from the largest integer constant reachable from the
+                      loop condition
+  * call/fusion/conditional -> recursed at multiplier 1
+
+Shapes in post-SPMD HLO are per-device, so all outputs are per-device.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+                "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+                "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+                "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16}
+
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_WHILE_RE = re.compile(
+    r"\bwhile\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TF_RE = re.compile(
+    r"true_computation=%?([\w.\-]+), false_computation=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_DOT_RE = re.compile(r"\bdot\(\s*%([\w.\-]+),\s*%([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _dims(s):
+    return [int(d) for d in s.split(",") if d]
+
+
+def _prod(dims):
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _nbytes(dtype, dims):
+    return _prod(dims) * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)     # var -> (dtype, dims)
+    is_entry: bool = False
+
+
+def split_computations(text):
+    comps = {}
+    cur = None
+    for line in text.splitlines():
+        s = line.strip()
+        if cur is None:
+            if s.endswith("{") and "->" in s and ("%" in s or
+                                                  s.startswith("ENTRY")):
+                name_part = s.split("(", 1)[0].strip()
+                is_entry = name_part.startswith("ENTRY")
+                name = name_part.replace("ENTRY", "").strip().lstrip("%")
+                cur = Computation(name=name, is_entry=is_entry)
+                comps[name] = cur
+            continue
+        if s == "}":
+            cur = None
+            continue
+        cur.lines.append(line)
+        m = _INSTR_RE.match(line)
+        if m:
+            var, rhs = m.groups()
+            sm = _SHAPE_RE.search(rhs)
+            if sm:
+                cur.shapes[var] = (sm.group(1), _dims(sm.group(2)))
+    return comps
+
+
+@dataclass
+class CompCost:
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_op: dict = field(default_factory=dict)
+    children: list = field(default_factory=list)   # (kind, name, cond)
+
+
+def _analyze_comp(comp: Computation):
+    cost = CompCost()
+    for line in comp.lines:
+        mw = _WHILE_RE.search(line)
+        if mw:
+            cost.children.append(("while", mw.group(2), mw.group(1)))
+            continue
+        mb = _BRANCHES_RE.search(line)
+        if mb:
+            for n in mb.group(1).split(","):
+                n = n.strip().lstrip("%")
+                if n:
+                    cost.children.append(("call", n, None))
+            continue
+        mtf = _TF_RE.search(line)
+        if mtf:
+            cost.children.append(("call", mtf.group(1), None))
+            cost.children.append(("call", mtf.group(2), None))
+            continue
+        mc = _CALLS_RE.search(line)
+        if mc:
+            cost.children.append(("call", mc.group(1), None))
+            # fusions can contain dots on some backends — recursing covers it
+        md = _DOT_RE.search(line)
+        if md:
+            m_out = _INSTR_RE.match(line)
+            if not m_out:
+                continue
+            out_dtype, out_dims = comp.shapes.get(m_out.group(1),
+                                                  ("f32", []))
+            lhs = comp.shapes.get(md.group(1))
+            csize = 1
+            mct = _CONTRACT_RE.search(line)
+            if lhs and mct:
+                for ci in _dims(mct.group(1)):
+                    if ci < len(lhs[1]):
+                        csize *= lhs[1][ci]
+            cost.dot_flops += 2.0 * _prod(out_dims) * csize
+            stream = _nbytes(out_dtype, out_dims)
+            for opname in (md.group(1), md.group(2)):
+                sh = comp.shapes.get(opname)
+                if sh:
+                    stream += _nbytes(*sh)
+            cost.dot_bytes += stream
+            continue
+        mcol = _COLL_RE.search(line)
+        if mcol:
+            op = mcol.group(1)
+            m_out = _INSTR_RE.match(line)
+            if not m_out:
+                continue
+            var = m_out.group(1)
+            sh = comp.shapes.get(var)
+            if not sh:
+                continue
+            nbytes = _nbytes(*sh)
+            n = 1
+            g = _GROUPS_RE.search(line)
+            if g:
+                n = len(g.group(1).split(","))
+            else:
+                g2 = _GROUPS_IOTA_RE.search(line)
+                if g2:
+                    n = int(g2.group(2))
+            if n <= 1:
+                continue
+            if op == "all-gather":
+                b = nbytes * (n - 1) / n
+            elif op == "all-reduce":
+                b = 2.0 * nbytes * (n - 1) / n
+            elif op == "reduce-scatter":
+                b = nbytes * (n - 1)
+            elif op == "all-to-all":
+                b = nbytes * (n - 1) / n
+            else:
+                b = float(nbytes)
+            cost.coll_bytes += b
+            cost.coll_by_op[op] = cost.coll_by_op.get(op, 0.0) + b
+    return cost
+
+
+def _trip_count(comps, costs, cond_name, depth=0):
+    """Largest integer constant reachable from the loop condition."""
+    if cond_name not in comps or depth > 3:
+        return 1
+    best = 1
+    comp = comps[cond_name]
+    for line in comp.lines:
+        for m in _CONST_RE.finditer(line):
+            best = max(best, int(m.group(1)))
+    for kind, child, _ in costs[cond_name].children:
+        best = max(best, _trip_count(comps, costs, child, depth + 1))
+    return best
+
+
+def analyze_hlo(text):
+    comps = split_computations(text)
+    costs = {name: _analyze_comp(c) for name, c in comps.items()}
+    entry = None
+    for name, c in comps.items():
+        if c.is_entry:
+            entry = name
+    if entry is None and comps:
+        entry = list(comps)[-1]
+
+    agg = {"dot_flops": 0.0, "dot_bytes": 0.0, "coll_bytes": 0.0,
+           "coll_by_op": {}}
+    stack = set()
+
+    def visit(name, mult):
+        if name not in costs or name in stack:
+            return
+        stack.add(name)
+        c = costs[name]
+        agg["dot_flops"] += mult * c.dot_flops
+        agg["dot_bytes"] += mult * c.dot_bytes
+        agg["coll_bytes"] += mult * c.coll_bytes
+        for op, b in c.coll_by_op.items():
+            agg["coll_by_op"][op] = agg["coll_by_op"].get(op, 0.0) + mult * b
+        for kind, child, cond in c.children:
+            if kind == "while":
+                t = _trip_count(comps, costs, cond)
+                visit(child, mult * t)
+                if cond != child:
+                    visit(cond, mult * t)
+            else:
+                visit(child, mult)
+        stack.discard(name)
+
+    if entry:
+        visit(entry, 1.0)
+    return agg

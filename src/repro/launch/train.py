@@ -1,0 +1,122 @@
+"""Training driver (deliverable (b): end-to-end example).
+
+CPU-runnable with reduced configs; the same driver lowers to the production
+mesh unchanged (launch/dryrun.py proves every full cell compiles there).
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --reduced \
+      --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+Resume after interruption (fault tolerance path):
+  ... --resume
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced as reduce_cfg
+from repro.models.zoo import build_model
+from repro.distributed.sharding import ShardingRules, tree_shardings
+from repro.launch.mesh import make_local_mesh
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import (make_train_step, init_train_state,
+                                    train_state_specs)
+from repro.data.loader import TokenLoader
+from repro.ckpt import checkpoint as ckpt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    model = build_model(cfg)
+    mesh = make_local_mesh(args.model_parallel)
+    rules = ShardingRules(mesh, cfg.sharding_mode)
+    opt_cfg = OptConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                        decay_steps=args.steps,
+                        quantize_state=cfg.quantize_opt_state)
+
+    params, opt_state = init_train_state(model, opt_cfg,
+                                         jax.random.key(args.seed),
+                                         compress_grads=args.compress_grads)
+    pspecs, ospecs = train_state_specs(model, opt_cfg, args.compress_grads)
+    p_sh, o_sh = tree_shardings(rules, pspecs), tree_shardings(rules, ospecs)
+
+    start_step = 0
+    loader_start = 0
+    if args.resume and args.ckpt_dir:
+        last = ckpt.latest_step(args.ckpt_dir)
+        if last is not None:
+            (params, opt_state), meta = ckpt.restore(
+                args.ckpt_dir, last, like=(params, opt_state),
+                shardings=(p_sh, o_sh) if p_sh else None)
+            start_step = meta["step"]
+            loader_start = meta["cursor_done"]
+            print(f"resumed from step {start_step}")
+
+    step_fn = jax.jit(
+        make_train_step(model, rules, opt_cfg, args.microbatches,
+                        args.compress_grads),
+        in_shardings=(p_sh, o_sh, None) if p_sh else None,
+        out_shardings=(p_sh, o_sh, None) if p_sh else None,
+        donate_argnums=(0, 1))
+
+    loader = TokenLoader(cfg.vocab_size, args.batch, args.seq,
+                         n_batches=args.steps, seed=args.seed,
+                         start_at=loader_start)
+    t0 = time.time()
+    handle = None
+    step = start_step
+    for wid, batch in loader:
+        batch = jax.tree.map(jnp.asarray, batch)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        step += 1
+        if step % args.log_every == 0 or step == start_step + 1:
+            m = jax.tree.map(lambda x: float(np.asarray(x)), metrics)
+            toks = args.batch * args.seq * (step - start_step)
+            print(f"step {step:5d} loss {m['loss']:.4f} "
+                  f"gnorm {m['grad_norm']:.3f} lr {m['lr']:.2e} "
+                  f"tok/s {toks / (time.time() - t0):,.0f}", flush=True)
+        if args.ckpt_dir and step % args.ckpt_every == 0:
+            if handle:
+                handle.wait()
+            handle = ckpt.save(args.ckpt_dir, step, (params, opt_state),
+                               meta={"step": step,
+                                     "cursor_done": len(loader.cursor()["done"])},
+                               async_save=True)
+        if step >= args.steps:
+            break
+    if handle:
+        handle.wait()
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, step, (params, opt_state),
+                  meta={"step": step,
+                        "cursor_done": len(loader.cursor()["done"])})
+        ckpt.prune_old(args.ckpt_dir, keep=3)
+    print("done")
+    return step
+
+
+if __name__ == "__main__":
+    main()

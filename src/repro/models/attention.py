@@ -1,0 +1,180 @@
+"""Grouped-query attention: blockwise (flash-style, online softmax) for
+train/prefill, single-step for decode.
+
+Blockwise form: outer lax.scan over query blocks, inner lax.scan over KV
+blocks, carries (m, l, acc) — O(Sq·D) live memory instead of O(Sq·Skv).
+Bodies are jax.checkpoint'd so the backward pass recomputes scores
+(flash-attention recompute strategy, structurally — the Pallas-kernel budget is
+reserved for the paper's audio hot-spots per DESIGN.md §6).
+
+Causal blocks below the diagonal are skipped at runtime via lax.cond.
+GQA is computed grouped (B,S,Hkv,G,D): repeated KV heads are never
+materialized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init, dtype_of
+
+_NEG = -1e30
+
+
+def init_attn(cfg, key, d_model=None):
+    E = d_model or cfg.d_model
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    return {
+        "wq": dense_init(kq, E, (E, cfg.q_dim), dt),
+        "wk": dense_init(kk, E, (E, cfg.kv_dim), dt),
+        "wv": dense_init(kv, E, (E, cfg.kv_dim), dt),
+        "wo": dense_init(ko, cfg.q_dim, (cfg.q_dim, E), dt),
+    }
+
+
+ATTN_SPECS = {
+    "wq": ("w_embed", "q_dim"), "wk": ("w_embed", "kv_dim"),
+    "wv": ("w_embed", "kv_dim"), "wo": ("q_dim", "w_embed"),
+}
+
+
+def _pick_block(size, target):
+    b = min(target, size)
+    while size % b:
+        b -= 1
+    return b
+
+
+def blockwise_attention(q, k, v, *, causal, prefix_len=0, q_offset=0,
+                        kv_offset=0, q_block=1024, kv_block=512,
+                        softmax_scale=None):
+    """q: (B,Sq,Hkv,G,D); k,v: (B,Skv,Hkv,D) -> (B,Sq,Hkv,G,D)."""
+    B, Sq, Hkv, G, D = q.shape
+    Skv = k.shape[1]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / np.sqrt(D)
+    qb = _pick_block(Sq, q_block)
+    kb = _pick_block(Skv, kv_block)
+    nq, nk = Sq // qb, Skv // kb
+    qs = jnp.moveaxis(q.reshape(B, nq, qb, Hkv, G, D), 1, 0)
+    ks = jnp.moveaxis(k.reshape(B, nk, kb, Hkv, D), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nk, kb, Hkv, D), 1, 0)
+    q_pos_base = jnp.arange(qb)
+    k_pos_base = jnp.arange(kb)
+
+    @jax.checkpoint
+    def kv_body(carry, inputs, qi, iq):
+        m, l, acc = carry
+        kj, vj, jk = inputs
+        q_pos = q_offset + iq * qb + q_pos_base          # (qb,)
+        k_pos = kv_offset + jk * kb + k_pos_base          # (kb,)
+
+        def compute(m, l, acc):
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                ok = k_pos[None, :] <= q_pos[:, None]
+                if prefix_len:
+                    ok = ok | (k_pos[None, :] < prefix_len)
+                s = jnp.where(ok[None, None, None], s, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vj.dtype), vj,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return m_new, l_new, acc_new
+
+        if causal and not prefix_len:
+            # runtime skip of fully-masked blocks (above the causal diagonal)
+            needed = (kv_offset + jk * kb) <= (q_offset + iq * qb + qb - 1)
+            carry = jax.lax.cond(needed, compute, lambda m, l, a: (m, l, a),
+                                 m, l, acc)
+        else:
+            carry = compute(m, l, acc)
+        return carry, None
+
+    def q_body(_, inputs):
+        qi, iq = inputs
+        m0 = jnp.full((B, Hkv, G, qb), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, qb, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            functools.partial(kv_body, qi=qi, iq=iq), (m0, l0, a0),
+            (ks, vs, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, jnp.moveaxis(out, -2, 1).astype(q.dtype)  # (B,qb,Hkv,G,D)
+
+    _, outs = jax.lax.scan(q_body, None, (qs, jnp.arange(nq)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Hkv, G, D)
+
+
+def cp_attention(q, k, v, *, causal, prefix_len=0, softmax_scale=None,
+                 rules=None):
+    """Context-parallel full-matrix attention (train-length sequences).
+
+    q sharded over seq on the model axis; k/v replicated — every score/PV
+    contraction is LOCAL, eliminating the per-block all-reduces GSPMD emits
+    when kv_heads doesn't divide TP (EXPERIMENTS.md §Perf, arctic iter 2).
+    Memory: (B_loc, H, S/TP, S) scores — fine at 4k, use blockwise for 32k.
+    """
+    B, Sq, Hkv, G, D = q.shape
+    scale = softmax_scale if softmax_scale is not None else 1.0 / np.sqrt(D)
+    if rules is not None:
+        q = rules.constrain(q, "batch", "seq_cp", None, None, None)
+        k = rules.constrain(k, "batch", None, None, None)
+        v = rules.constrain(v, "batch", None, None, None)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = jnp.arange(Sq)[:, None]
+        kpos = jnp.arange(k.shape[1])[None, :]
+        ok = kpos <= qpos
+        if prefix_len:
+            ok = ok | (kpos < prefix_len)
+        s = jnp.where(ok[None, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def decode_attention(q, k, v, pos, *, softmax_scale=None):
+    """One-token attention against a cache.
+
+    q: (B,Hkv,G,D); k,v: (B,S,Hkv,D); pos: scalar current position.
+    Works unchanged when k/v are sequence-sharded (GSPMD inserts the psum over
+    the contraction — flash-decode)."""
+    D = q.shape[-1]
+    S = k.shape[1]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / np.sqrt(D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    ok = jnp.arange(S)[None, None, None, :] <= pos
+    s = jnp.where(ok, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def split_heads(cfg, q, k, v):
+    """(B,Sq,q_dim)/(B,Skv,kv_dim) -> grouped (B,Sq,Hkv,G,D), (B,Skv,Hkv,D).
+
+    k/v may have a different sequence length than q (cross-attention)."""
+    B, Sq, _ = q.shape
+    Skv = k.shape[1]
+    G = cfg.num_heads // cfg.num_kv_heads
+    q = q.reshape(B, Sq, cfg.num_kv_heads, G, cfg.head_dim)
+    k = k.reshape(B, Skv, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, Skv, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def merge_heads(cfg, o):
+    B, S = o.shape[:2]
+    return o.reshape(B, S, cfg.q_dim)

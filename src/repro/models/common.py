@@ -1,0 +1,99 @@
+"""Shared layer primitives: norms, embeddings, RoPE, positional encodings, init."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------- init helpers
+def dense_init(key, fan_in, shape, dtype):
+    scale = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ----------------------------------------------------------------------- norms
+def rms_norm(x, scale, eps):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def make_norm_params(cfg, key, d):
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype_of(cfg))}
+    return {"scale": jnp.ones((d,), dtype_of(cfg)),
+            "bias": jnp.zeros((d,), dtype_of(cfg))}
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "rmsnorm":
+        return rms_norm(x, p["scale"], cfg.norm_eps)
+    return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+
+
+# ------------------------------------------------------------------------ RoPE
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(head_dim, theta))           # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., :, None, :]                           # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len, d_model, offset=0):
+    pos = np.arange(offset, offset + seq_len, dtype=np.float32)[:, None]
+    dim = np.arange(0, d_model, 2, dtype=np.float32)[None, :]
+    angle = pos / np.power(10_000.0, dim / d_model)
+    enc = np.zeros((seq_len, d_model), np.float32)
+    enc[:, 0::2] = np.sin(angle)
+    enc[:, 1::2] = np.cos(angle)
+    return jnp.asarray(enc)
+
+
+# ----------------------------------------------------------------- embeddings
+def make_embedding(cfg, key):
+    return {"tok": embed_init(key, (cfg.padded_vocab, cfg.d_model), dtype_of(cfg))}
+
+
+def embed_tokens(cfg, params, tokens, rules):
+    x = params["tok"][tokens]
+    if cfg.name.startswith("gemma") or cfg.family == "vlm":   # gemma-family scaling
+        x = (x.astype(jnp.float32) * np.sqrt(cfg.d_model)).astype(x.dtype)
+    return rules.constrain(x, "batch", "seq", "embed")
+
+
+def logits_from_hidden(cfg, params, x, unembed=None):
+    """x: (B,S,E) -> (B,S,padded_vocab) float32."""
+    w = params["tok"] if unembed is None else unembed
+    logits = jnp.einsum("bse,ve->bsv", x, w).astype(jnp.float32)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits

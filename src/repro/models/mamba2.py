@@ -1,0 +1,198 @@
+"""Mamba2 (SSD) block: chunked-scan training form + single-token decode form.
+
+Chunked state-space dual form (Dao & Gu 2024): sequence is processed in chunks
+of `ssm_chunk`; within a chunk the quadratic masked-decay form runs on the MXU,
+between chunks a lax.scan carries the (B,H,P,N) state. All decays are computed
+in log space (f32) for stability.
+
+Sharding: d_inner (x/z projections, conv channels, heads) maps to the "model"
+axis; the SSM state dims (P,N) stay local to a head.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init, dtype_of
+
+
+def mamba_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    P = min(64, d_inner)                     # head dim
+    H = d_inner // P
+    return d_inner, H, P, cfg.ssm_state
+
+
+def init_mamba(cfg, key):
+    dt = dtype_of(cfg)
+    E = cfg.d_model
+    d_inner, H, P, N = mamba_dims(cfg)
+    ks = jax.random.split(key, 8)
+    dt_init = np.log(np.expm1(np.exp(np.random.RandomState(0).uniform(
+        np.log(1e-3), np.log(1e-1), size=(H,)))))
+    return {
+        "w_z": dense_init(ks[0], E, (E, d_inner), dt),
+        "w_x": dense_init(ks[1], E, (E, d_inner), dt),
+        "w_B": dense_init(ks[2], E, (E, N), dt),
+        "w_C": dense_init(ks[3], E, (E, N), dt),
+        "w_dt": dense_init(ks[4], E, (E, H), dt),
+        "dt_bias": jnp.asarray(dt_init, jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "conv_x": dense_init(ks[5], cfg.ssm_conv, (cfg.ssm_conv, d_inner), dt),
+        "conv_B": dense_init(ks[6], cfg.ssm_conv, (cfg.ssm_conv, N), dt),
+        "conv_C": dense_init(ks[7], cfg.ssm_conv, (cfg.ssm_conv, N), dt),
+        "norm": jnp.zeros((d_inner,), dt),
+        "w_out": dense_init(ks[4], d_inner, (d_inner, E), dt),
+    }
+
+
+MAMBA_SPECS = {
+    "w_z": ("w_embed", "ff"), "w_x": ("w_embed", "ff"),
+    "w_B": ("w_embed", None), "w_C": ("w_embed", None),
+    "w_dt": ("w_embed", None), "dt_bias": (None,), "A_log": (None,),
+    "D": (None,), "conv_x": (None, "ff"), "conv_B": (None, None),
+    "conv_C": (None, None), "norm": ("ff",), "w_out": ("ff", "w_embed"),
+}
+
+
+def _causal_conv(x, w):
+    """x: (B,S,C), w: (k,C) depthwise causal conv as k shifted adds."""
+    k = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, k):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[k - 1 - i]
+    return out
+
+
+def _gated_rmsnorm(y, z, scale, eps=1e-5):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    return y * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+
+
+def _ssd_chunked(xdt, a, Bm, Cm, chunk, state0=None):
+    """Chunked SSD scan.
+
+    xdt: (B,S,H,P) inputs pre-multiplied by dt; a: (B,S,H) log-decay dt*A;
+    Bm/Cm: (B,S,N). Returns y: (B,S,H,P) (f32) and final state (B,H,P,N)."""
+    B_, S, H, P = xdt.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q //= 2
+    nc = S // Q
+    xs = jnp.moveaxis(xdt.reshape(B_, nc, Q, H, P), 1, 0)
+    as_ = jnp.moveaxis(a.reshape(B_, nc, Q, H), 1, 0)
+    Bs = jnp.moveaxis(Bm.reshape(B_, nc, Q, N), 1, 0)
+    Cs = jnp.moveaxis(Cm.reshape(B_, nc, Q, N), 1, 0)
+    tril = jnp.tril(jnp.ones((Q, Q), bool))
+
+    @jax.checkpoint
+    def body(state, inp):
+        x_c, a_c, B_c, C_c = inp                     # (B,Q,H,P),(B,Q,H),(B,Q,N)
+        a_t = jnp.moveaxis(a_c, -1, 1).astype(jnp.float32)   # (B,H,Q)
+        a_cs = jnp.cumsum(a_t, axis=-1)                       # (B,H,Q)
+        # intra-chunk: masked decay matrix
+        L = jnp.where(tril, jnp.exp(a_cs[..., :, None] - a_cs[..., None, :]),
+                      0.0)                                    # (B,H,Q,Q)
+        scores = jnp.einsum("bqn,bkn->bqk", C_c, B_c,
+                            preferred_element_type=jnp.float32)
+        Y_diag = jnp.einsum("bqk,bhqk,bkhp->bqhp", scores, L,
+                            xs_f32 := x_c.astype(jnp.float32))
+        # contribution of the carried-in state
+        decay_out = jnp.exp(a_cs)                             # (B,H,Q)
+        Y_off = jnp.einsum("bqn,bhpn,bhq->bqhp", C_c.astype(jnp.float32),
+                           state, decay_out)
+        # new state
+        decay_in = jnp.exp(a_cs[..., -1:] - a_cs)             # (B,H,Q)
+        chunk_state = jnp.einsum("bkn,bhk,bkhp->bhpn",
+                                 B_c.astype(jnp.float32), decay_in, xs_f32)
+        state = state * jnp.exp(a_cs[..., -1])[..., None, None] + chunk_state
+        return state, Y_diag + Y_off
+
+    if state0 is None:
+        state0 = jnp.zeros((B_, H, P, N), jnp.float32)
+    state, ys = jax.lax.scan(body, state0, (xs, as_, Bs, Cs))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B_, S, H, P)
+    return y, state
+
+
+def apply_mamba(cfg, p, x, rules, state0=None, return_state=False,
+                return_cache=False):
+    """Training/prefill form. x: (B,S,E) -> (B,S,E).
+
+    return_cache: also return a decode-compatible cache (final SSM state +
+    conv input tails), for prefill-then-serve."""
+    d_inner, H, P, N = mamba_dims(cfg)
+    z = x @ p["w_z"]
+    xc_in = x @ p["w_x"]
+    bc_in = x @ p["w_B"]
+    cc_in = x @ p["w_C"]
+    xi = _causal_conv(xc_in, p["conv_x"])
+    xi = jax.nn.silu(xi)
+    xi = rules.constrain(xi, "batch", "seq", "act_ff")
+    Bm = jax.nn.silu(_causal_conv(bc_in, p["conv_B"]))
+    Cm = jax.nn.silu(_causal_conv(cc_in, p["conv_C"]))
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                  # (H,) negative
+    B_, S, _ = x.shape
+    xh = xi.reshape(B_, S, H, P)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+    a = dt * A                                                # (B,S,H) log decay
+    y, state = _ssd_chunked(xdt, a, Bm, Cm, cfg.ssm_chunk, state0)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = _gated_rmsnorm(y.reshape(B_, S, d_inner), z, p["norm"])
+    out = (y.astype(x.dtype) @ p["w_out"])
+    if return_cache:
+        t = cfg.ssm_conv - 1
+        cache = {"state": state, "conv_x": xc_in[:, -t:],
+                 "conv_B": bc_in[:, -t:], "conv_C": cc_in[:, -t:]}
+        return out, cache
+    if return_state:
+        return out, state
+    return out
+
+
+def init_mamba_cache(cfg, batch, dtype=jnp.float32):
+    d_inner, H, P, N = mamba_dims(cfg)
+    k = cfg.ssm_conv
+    return {
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv_x": jnp.zeros((batch, k - 1, d_inner), dtype),
+        "conv_B": jnp.zeros((batch, k - 1, N), dtype),
+        "conv_C": jnp.zeros((batch, k - 1, N), dtype),
+    }
+
+
+def decode_mamba(cfg, p, x, cache, rules):
+    """Single-token step. x: (B,E); cache from init_mamba_cache."""
+    d_inner, H, P, N = mamba_dims(cfg)
+
+    def conv_step(hist, xt, w):
+        buf = jnp.concatenate([hist, xt[:, None]], axis=1)    # (B,k,C)
+        out = jnp.einsum("bkc,kc->bc", buf, w)
+        return out, buf[:, 1:]
+
+    z = x @ p["w_z"]
+    xc, conv_x = conv_step(cache["conv_x"], x @ p["w_x"], p["conv_x"])
+    xi = jax.nn.silu(xc)
+    Bc, conv_B = conv_step(cache["conv_B"], x @ p["w_B"], p["conv_B"])
+    Cc, conv_C = conv_step(cache["conv_C"], x @ p["w_C"], p["conv_C"])
+    Bm, Cm = jax.nn.silu(Bc), jax.nn.silu(Cc)
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    B_ = x.shape[0]
+    xh = xi.reshape(B_, H, P).astype(jnp.float32)
+    da = jnp.exp(dt * A)                                       # (B,H)
+    state = cache["state"] * da[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, Bm.astype(jnp.float32), xh)
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xh
+    y = _gated_rmsnorm(y.reshape(B_, d_inner), z, p["norm"])
+    out = y.astype(x.dtype) @ p["w_out"]
+    new_cache = {"state": state, "conv_x": conv_x, "conv_B": conv_B,
+                 "conv_C": conv_C}
+    return out, new_cache

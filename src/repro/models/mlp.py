@@ -1,0 +1,54 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / squared-ReLU / GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, dtype_of
+
+GLU = ("swiglu", "geglu")
+
+
+def init_mlp(cfg, key, d_model=None, d_ff=None, mlp=None):
+    E = d_model or cfg.d_model
+    F = d_ff if d_ff is not None else cfg.d_ff
+    mlp = mlp or cfg.mlp
+    dt = dtype_of(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_down": dense_init(k3, F, (F, E), dt)}
+    if mlp in GLU:
+        p["w_gate"] = dense_init(k1, E, (E, F), dt)
+        p["w_up"] = dense_init(k2, E, (E, F), dt)
+    else:
+        p["w_up"] = dense_init(k2, E, (E, F), dt)
+    return p
+
+
+def mlp_specs(mlp):
+    p = {"w_down": ("ff", "w_embed"), "w_up": ("w_embed", "ff")}
+    if mlp in GLU:
+        p["w_gate"] = ("w_embed", "ff")
+    return p
+
+
+def _act(mlp, h):
+    if mlp == "swiglu":
+        return jax.nn.silu(h)
+    if mlp == "geglu":
+        return jax.nn.gelu(h)
+    if mlp == "squared_relu":
+        r = jax.nn.relu(h)
+        return r * r
+    if mlp == "gelu":
+        return jax.nn.gelu(h)
+    raise KeyError(mlp)
+
+
+def apply_mlp(cfg, p, x, rules, mlp=None):
+    mlp = mlp or cfg.mlp
+    if mlp in GLU:
+        h = _act(mlp, x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = _act(mlp, x @ p["w_up"])
+    h = rules.constrain(h, "batch", "seq", "act_ff")
+    return (h @ p["w_down"]).astype(x.dtype)

@@ -1,0 +1,124 @@
+"""Mixture-of-Experts block: top-k routing, capacity-bounded scatter dispatch,
+expert-parallel batched matmuls (experts sharded over the "model" axis).
+
+Dispatch is gather/scatter-based (GShard-style capacity without materializing
+the (tokens, experts, capacity) one-hot): per batch row, tokens are assigned a
+position-in-expert by a cumsum over the (S*K, E) one-hot (small), then
+scattered into a dense (E, C, d) buffer. Tokens past capacity are dropped
+(their contribution is the residual stream only) — standard TPU practice.
+
+Router statistics (per-expert load fractions) are returned: they are the MoE
+analogue of the paper's load-balance analysis (Figs 14-18), and are consumed by
+the same balance reporting the audio scheduler uses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init, dtype_of
+from repro.models.mlp import init_mlp, apply_mlp, GLU, _act
+
+
+def moe_capacity(seq_len, num_experts, top_k, capacity_factor=1.25):
+    c = int(np.ceil(seq_len * top_k / num_experts * capacity_factor))
+    return max(8, ((c + 7) // 8) * 8)          # pad to 8 for tiling
+
+
+def init_moe(cfg, key):
+    dt = dtype_of(cfg)
+    kr, ke = jax.random.split(key)
+    E, F, X = cfg.d_model, cfg.d_ff, cfg.num_experts
+    p = {"router": dense_init(kr, E, (E, X), jnp.float32)}
+    ks = jax.random.split(ke, 3)
+    p["w_gate"] = dense_init(ks[0], E, (X, E, F), dt) if cfg.mlp in GLU else None
+    p["w_up"] = dense_init(ks[1], E, (X, E, F), dt)
+    p["w_down"] = dense_init(ks[2], F, (X, F, E), dt)
+    p = {k: v for k, v in p.items() if v is not None}
+    return p
+
+
+def moe_specs(cfg):
+    if cfg.expert_shard == "tp":      # experts replicated, ff dim sharded
+        p = {"router": ("w_embed", None),
+             "w_up": (None, "w_embed", "ff"),
+             "w_down": (None, "ff", "w_embed")}
+        if cfg.mlp in GLU:
+            p["w_gate"] = (None, "w_embed", "ff")
+        return p
+    p = {"router": ("w_embed", None),
+         "w_up": ("experts", "w_embed", "expert_ff"),
+         "w_down": ("experts", "expert_ff", "w_embed")}
+    if cfg.mlp in GLU:
+        p["w_gate"] = ("experts", "w_embed", "expert_ff")
+    return p
+
+
+def apply_moe(cfg, p, x, rules, capacity_factor=None):
+    """x: (B,S,E_model) -> (out, aux) with aux = load-balance metrics/loss."""
+    B, S, E = x.shape
+    X, K = cfg.num_experts, cfg.top_k
+    cf = cfg.moe_capacity_factor if capacity_factor is None else capacity_factor
+    C = moe_capacity(S, X, K, cf)
+
+    logits = jnp.einsum("bse,ex->bsx", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                       # (B,S,X)
+    gate_w, gate_i = jax.lax.top_k(probs, K)                      # (B,S,K)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # position-in-expert via cumsum of one-hot over flattened (S*K)
+    flat_i = gate_i.reshape(B, S * K)                             # (B,T)
+    onehot = jax.nn.one_hot(flat_i, X, dtype=jnp.int32)           # (B,T,X)
+    pos_all = jnp.cumsum(onehot, axis=1) - 1                      # (B,T,X)
+    pos = jnp.take_along_axis(
+        pos_all, flat_i[..., None], axis=-1)[..., 0]              # (B,T)
+    keep = pos < C
+
+    # dispatch: scatter tokens into (B, X, C, E).
+    # The scatter/gather pair MUST run on batch-only sharding: with the
+    # buffer sharded on the expert dim, the flat (X*C) token gather crosses
+    # expert shards and SPMD falls back to replicating the whole (B,X*C,E)
+    # buffer per layer (arctic: 4.6 TB/dev of all-gathers — EXPERIMENTS.md
+    # §Perf arctic iter 1). Constraining batch-only here and expert-sharded
+    # around the expert FFN yields the canonical MoE all-to-all pair.
+    tok = jnp.repeat(x, K, axis=1)                                # (B,T,E) bf16
+    slot = jnp.where(keep, flat_i * C + pos, X * C)               # overflow slot
+    dispatch = jnp.zeros((B, X * C + 1, E), x.dtype)
+    dispatch = dispatch.at[
+        jnp.arange(B)[:, None], slot].add(tok)                    # (B,XC+1,E)
+    dispatch = rules.constrain(dispatch, "batch", None, None)
+    xe = dispatch[:, :-1].reshape(B, X, C, E)
+    exp_ax = "act_experts" if cfg.expert_shard == "ep" else None
+    ff_ax = "act_expert_ff" if cfg.expert_shard == "ep" else "act_ff"
+    xe = rules.constrain(xe, "batch", exp_ax, None, None)   # a2a: to experts
+
+    # expert FFN (batched over experts; experts or their ff dim sharded on
+    # "model" per cfg.expert_shard)
+    if cfg.mlp in GLU:
+        h = _act(cfg.mlp, jnp.einsum("bxce,xef->bxcf", xe, p["w_gate"]))
+        h = h * jnp.einsum("bxce,xef->bxcf", xe, p["w_up"])
+    else:
+        h = _act(cfg.mlp, jnp.einsum("bxce,xef->bxcf", xe, p["w_up"]))
+    h = rules.constrain(h, "batch", exp_ax, None, ff_ax)
+    ye = jnp.einsum("bxcf,xfe->bxce", h, p["w_down"])              # (B,X,C,E)
+    ye = rules.constrain(ye, "batch", None, None, None)      # a2a: back
+
+    # combine: gather each token's expert output, weight, sum over K
+    # (local: buffer and indices are both batch-sharded here)
+    flat_slot = jnp.minimum(flat_i * C + pos, X * C - 1)
+    yt = jnp.take_along_axis(
+        ye.reshape(B, X * C, E), flat_slot[..., None], axis=1)     # (B,T,E)
+    yt = yt * (gate_w.reshape(B, S * K, 1) * keep[..., None]).astype(yt.dtype)
+    out = yt.reshape(B, S, K, E).sum(axis=2).astype(x.dtype)
+
+    # load-balance aux (Switch-style) + stats for the balance report
+    me = probs.mean(axis=(0, 1))                                   # (X,)
+    ce = (onehot.sum(axis=(0, 1)) / (B * S * K)).astype(jnp.float32)
+    aux = {
+        "lb_loss": X * jnp.sum(me * ce),
+        "router_z": jnp.mean(jax.scipy.special.logsumexp(logits, -1) ** 2),
+        "expert_load": ce,
+        "dropped_frac": 1.0 - keep.mean(),
+    }
+    return out, aux

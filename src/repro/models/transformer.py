@@ -1,0 +1,269 @@
+"""Transformer layer assembly: attention sublayer (train/prefill + decode),
+dense/MoE layers, stacked-scan runner. Used by dense, MoE, VLM, enc-dec and
+the hybrid's shared attention block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models.common import apply_norm, make_norm_params, apply_rope
+from repro.models.mlp import init_mlp, apply_mlp, mlp_specs
+from repro.models.moe import init_moe, apply_moe, moe_specs
+
+NORM_SPECS_RMS = {"scale": (None,)}
+NORM_SPECS_LN = {"scale": (None,), "bias": (None,)}
+
+
+def norm_specs(cfg):
+    return NORM_SPECS_RMS if cfg.norm == "rmsnorm" else NORM_SPECS_LN
+
+
+# ------------------------------------------------------------ attention sublayer
+def attn_sublayer(cfg, p, x, positions, rules, *, causal=True, prefix_len=0,
+                  kv_x=None, kv_positions=None, q_block=1024, kv_block=512,
+                  return_kv=False):
+    """Full-sequence attention. x: (B,S,E) -> (B,S,E) [, (k, v) for caching]."""
+    kv_in = x if kv_x is None else kv_x
+    q = rules.constrain(x @ p["wq"], "batch", "seq", "act_q")
+    k = rules.constrain(kv_in @ p["wk"], "batch", "seq", "act_kv")
+    v = rules.constrain(kv_in @ p["wv"], "batch", "seq", "act_kv")
+    q, k, v = A.split_heads(cfg, q, k, v)
+    if cfg.use_rope:
+        kv_pos = positions if kv_positions is None else kv_positions
+        B, S, Hkv, G, D = q.shape
+        q = apply_rope(q.reshape(B, S, Hkv * G, D), positions,
+                       cfg.rope_theta).reshape(B, S, Hkv, G, D)
+        k = apply_rope(k, kv_pos, cfg.rope_theta)
+    use_cp = getattr(rules, "mode", "") == "sp_ep" and \
+        kv_x is None and q.shape[1] <= 8192
+    if use_cp:
+        o = A.cp_attention(q, k, v, causal=causal, prefix_len=prefix_len,
+                           rules=rules)
+    else:
+        o = A.blockwise_attention(q, k, v, causal=causal,
+                                  prefix_len=prefix_len,
+                                  q_block=q_block, kv_block=kv_block)
+    o = A.merge_heads(cfg, o)
+    o = rules.constrain(o, "batch", "seq", "act_q")
+    out = o @ p["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attn_decode_sublayer(cfg, p, x, k_cache, v_cache, pos, rules, *,
+                         cross=False, update_cache=True):
+    """Single-token attention vs cache.
+
+    x: (B,1,E); k_cache/v_cache: (B,S,Hkv,D); pos: scalar int32.
+    Returns (out (B,1,E), k_cache, v_cache)."""
+    B = x.shape[0]
+    q = x @ p["wq"]                                           # (B,1,q_dim)
+    G = cfg.num_heads // cfg.num_kv_heads
+    qh = q.reshape(B, 1, cfg.num_kv_heads * G, cfg.head_dim)
+    if cfg.use_rope:
+        pos_arr = jnp.full((B, 1), pos, jnp.int32)
+        qh = apply_rope(qh, pos_arr, cfg.rope_theta)
+    qh = qh.reshape(B, cfg.num_kv_heads, G, cfg.head_dim)
+    if not cross and update_cache:
+        k_new = (x @ p["wk"]).reshape(B, 1, cfg.num_kv_heads, cfg.head_dim)
+        v_new = (x @ p["wv"]).reshape(B, 1, cfg.num_kv_heads, cfg.head_dim)
+        if cfg.use_rope:
+            k_new = apply_rope(k_new, jnp.full((B, 1), pos, jnp.int32),
+                               cfg.rope_theta)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0))
+    att_pos = k_cache.shape[1] if cross else pos
+    o = A.decode_attention(qh, k_cache.astype(x.dtype), v_cache.astype(x.dtype),
+                           att_pos)
+    o = o.reshape(B, 1, cfg.q_dim)
+    return o @ p["wo"], k_cache, v_cache
+
+
+# ------------------------------------------------------------ layer definitions
+def init_dense_layer(cfg, key, cross=False):
+    ks = jax.random.split(key, 5)
+    p = {"ln1": make_norm_params(cfg, ks[0], cfg.d_model),
+         "attn": A.init_attn(cfg, ks[1]),
+         "ln2": make_norm_params(cfg, ks[2], cfg.d_model)}
+    if cfg.family == "moe":
+        p["moe"] = init_moe(cfg, ks[3])
+        if cfg.dense_ff:
+            p["mlp"] = init_mlp(cfg, ks[4], d_ff=cfg.dense_ff)
+    else:
+        p["mlp"] = init_mlp(cfg, ks[3])
+    if cross:
+        p["ln_x"] = make_norm_params(cfg, ks[0], cfg.d_model)
+        p["xattn"] = A.init_attn(cfg, ks[4])
+    return p
+
+
+def dense_layer_specs(cfg, cross=False):
+    ns = norm_specs(cfg)
+    p = {"ln1": ns, "attn": dict(A.ATTN_SPECS), "ln2": ns}
+    if cfg.family == "moe":
+        p["moe"] = moe_specs(cfg)
+        if cfg.dense_ff:
+            p["mlp"] = mlp_specs(cfg.mlp)
+    else:
+        p["mlp"] = mlp_specs(cfg.mlp)
+    if cross:
+        p["ln_x"] = ns
+        p["xattn"] = dict(A.ATTN_SPECS)
+    return p
+
+
+def apply_dense_layer(cfg, p, x, positions, rules, *, causal=True,
+                      prefix_len=0, enc_out=None, enc_positions=None,
+                      return_kv=False):
+    """Pre-norm residual layer; optional cross-attention (enc-dec decoder).
+
+    Returns (x, moe_aux, kv) — kv is (k, v) [+ cross (xk, xv)] if return_kv."""
+    h = apply_norm(cfg, p["ln1"], x)
+    kv = None
+    if return_kv:
+        o, kv = attn_sublayer(cfg, p["attn"], h, positions, rules,
+                              causal=causal, prefix_len=prefix_len,
+                              return_kv=True)
+        x = x + o
+    else:
+        x = x + attn_sublayer(cfg, p["attn"], h, positions, rules,
+                              causal=causal, prefix_len=prefix_len)
+    if enc_out is not None:
+        h = apply_norm(cfg, p["ln_x"], x)
+        if return_kv:
+            o, xkv = attn_sublayer(cfg, p["xattn"], h, positions, rules,
+                                   causal=False, kv_x=enc_out,
+                                   kv_positions=enc_positions, return_kv=True)
+            kv = kv + xkv
+            x = x + o
+        else:
+            x = x + attn_sublayer(cfg, p["xattn"], h, positions, rules,
+                                  causal=False, kv_x=enc_out,
+                                  kv_positions=enc_positions)
+    h = apply_norm(cfg, p["ln2"], x)
+    aux = None
+    if cfg.family == "moe":
+        moe_out, aux = apply_moe(cfg, p["moe"], h, rules)
+        out = moe_out
+        if cfg.dense_ff:
+            out = out + apply_mlp(cfg, p["mlp"], h, rules)
+        x = x + out
+    else:
+        x = x + apply_mlp(cfg, p["mlp"], h, rules)
+    x = rules.constrain(x, "batch", "seq", "embed")
+    return x.astype(h.dtype), aux, kv
+
+
+def decode_dense_layer(cfg, p, x, k_cache, v_cache, pos, rules,
+                       xk_cache=None, xv_cache=None):
+    h = apply_norm(cfg, p["ln1"], x)
+    o, k_cache, v_cache = attn_decode_sublayer(cfg, p["attn"], h, k_cache,
+                                               v_cache, pos, rules)
+    x = x + o
+    if xk_cache is not None:
+        h = apply_norm(cfg, p["ln_x"], x)
+        o, _, _ = attn_decode_sublayer(cfg, p["xattn"], h, xk_cache, xv_cache,
+                                       pos, rules, cross=True)
+        x = x + o
+    h = apply_norm(cfg, p["ln2"], x)
+    if cfg.family == "moe":
+        out, _ = apply_moe(cfg, p["moe"], h, rules)
+        if cfg.dense_ff:
+            out = out + apply_mlp(cfg, p["mlp"], h, rules)
+        x = x + out
+    else:
+        x = x + apply_mlp(cfg, p["mlp"], h, rules)
+    return x.astype(h.dtype), k_cache, v_cache
+
+
+# ------------------------------------------------------------ stacked runners
+def stack_init(init_fn, key, n):
+    """Initialize n layers and stack leaves on a leading axis (for lax.scan)."""
+    keys = jax.random.split(key, n)
+    layers = [init_fn(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def stacked_specs(layer_specs):
+    """Prepend the layer axis (replicated) to every leaf spec tuple."""
+    return jax.tree.map(lambda t: (None,) + t, layer_specs,
+                        is_leaf=lambda v: isinstance(v, tuple))
+
+
+def run_stack(cfg, stacked, x, positions, rules, *, causal=True,
+              prefix_len=0, enc_out=None, enc_positions=None, remat=True):
+    """lax.scan over stacked layer params. Returns (x, summed moe aux)."""
+
+    def body(carry, layer_p):
+        h, aux_acc = carry
+        h, aux, _ = apply_dense_layer(cfg, layer_p, h, positions, rules,
+                                      causal=causal, prefix_len=prefix_len,
+                                      enc_out=enc_out,
+                                      enc_positions=enc_positions)
+        if aux is not None:
+            aux_acc = {"lb_loss": aux_acc["lb_loss"] + aux["lb_loss"],
+                       "router_z": aux_acc["router_z"] + aux["router_z"],
+                       "expert_load": aux_acc["expert_load"]
+                       + aux["expert_load"],
+                       "dropped_frac": aux_acc["dropped_frac"]
+                       + aux["dropped_frac"]}
+        return (h, aux_acc), None
+
+    aux0 = {"lb_loss": jnp.zeros(()), "router_z": jnp.zeros(()),
+            "expert_load": jnp.zeros((cfg.num_experts,)),
+            "dropped_frac": jnp.zeros(())} if cfg.family == "moe" else None
+    fn = jax.checkpoint(body) if remat else body
+    (x, aux), _ = jax.lax.scan(fn, (x, aux0), stacked)
+    if aux is not None:
+        n = cfg.num_layers
+        aux = jax.tree.map(lambda v: v / n, aux)
+    return x, aux
+
+
+def run_stack_prefill(cfg, stacked, x, positions, rules, *, causal=True,
+                      prefix_len=0, enc_out=None, enc_positions=None):
+    """Scan over layers, emitting per-layer KV caches: (x, caches)."""
+
+    def body(h, layer_p):
+        h, _, kv = apply_dense_layer(cfg, layer_p, h, positions, rules,
+                                     causal=causal, prefix_len=prefix_len,
+                                     enc_out=enc_out,
+                                     enc_positions=enc_positions,
+                                     return_kv=True)
+        return h, kv
+
+    x, kvs = jax.lax.scan(body, x, stacked)
+    caches = {"k": kvs[0], "v": kvs[1]}                  # (L,B,S,Hkv,D)
+    if enc_out is not None:
+        caches["xk"], caches["xv"] = kvs[2], kvs[3]
+    return x, caches
+
+
+def run_stack_decode(cfg, stacked, x, caches, pos, rules):
+    """Scan over layers for decode; caches: dict of (L, ...) arrays."""
+
+    def body(h, inp):
+        layer_p, kc, vc, xkc, xvc = inp
+        h, kc, vc = decode_dense_layer(cfg, layer_p, h, kc, vc, pos, rules,
+                                       xk_cache=xkc, xv_cache=xvc)
+        return h, (kc, vc)
+
+    has_cross = "xk" in caches
+    xs = (stacked, caches["k"], caches["v"],
+          caches["xk"] if has_cross else jnp.zeros((cfg.num_layers,)),
+          caches["xv"] if has_cross else jnp.zeros((cfg.num_layers,)))
+    if not has_cross:
+        def body(h, inp):  # noqa: F811 — simpler body without cross caches
+            layer_p, kc, vc = inp
+            h, kc, vc = decode_dense_layer(cfg, layer_p, h, kc, vc, pos, rules)
+            return h, (kc, vc)
+        xs = (stacked, caches["k"], caches["v"])
+    x, (k_new, v_new) = jax.lax.scan(body, x, xs)
+    new_caches = dict(caches)
+    new_caches["k"], new_caches["v"] = k_new, v_new
+    return x, new_caches

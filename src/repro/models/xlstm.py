@@ -1,0 +1,192 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory, recurrent).
+
+Faithful to the xLSTM cell equations (Beck et al. 2024) with stabilized
+exponential gating (running max-state m). Both cells run as lax.scan over
+time — sLSTM is inherently sequential (its recurrence reads h_{t-1}); the
+recurrent mLSTM baseline is the hillclimb target for a chunkwise-parallel
+variant (see EXPERIMENTS.md §Perf).
+
+Simplification vs the reference implementation (documented per DESIGN.md):
+both block types use a pre-norm residual block with 2x up-projection and a
+SiLU-gated output branch; per-head causal conv frontends are omitted.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, dtype_of
+
+
+def xlstm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = cfg.num_heads
+    dh = d_inner // H
+    return d_inner, H, dh
+
+
+# ------------------------------------------------------------------- mLSTM
+def init_mlstm(cfg, key):
+    dt = dtype_of(cfg)
+    E = cfg.d_model
+    d_inner, H, dh = xlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": dense_init(ks[0], E, (E, 2 * d_inner), dt),
+        "w_q": dense_init(ks[1], d_inner, (d_inner, d_inner), dt),
+        "w_k": dense_init(ks[2], d_inner, (d_inner, d_inner), dt),
+        "w_v": dense_init(ks[3], d_inner, (d_inner, d_inner), dt),
+        "w_if": dense_init(ks[4], d_inner, (d_inner, 2 * H), jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]),
+        "norm": jnp.zeros((d_inner,), dt),
+        "w_down": dense_init(ks[5], d_inner, (d_inner, E), dt),
+    }
+
+
+MLSTM_SPECS = {
+    "w_up": ("w_embed", "ff"), "w_q": (None, "ff"), "w_k": (None, "ff"),
+    "w_v": (None, "ff"), "w_if": ("ff", None), "b_if": (None,),
+    "norm": ("ff",), "w_down": ("ff", "w_embed"),
+}
+
+
+def _mlstm_scan(q, k, v, li, lf, state0):
+    """q,k,v: (B,S,H,dh); li,lf: (B,S,H) log gates; returns h (B,S,H,dh)."""
+    B, S, H, dh = q.shape
+
+    def body(carry, inp):
+        C, n, m = carry                    # (B,H,dh,dh),(B,H,dh),(B,H)
+        qt, kt, vt, lit, lft = inp
+        m_new = jnp.maximum(lft + m, lit)
+        ig = jnp.exp(lit - m_new)[..., None]
+        fg = jnp.exp(lft + m - m_new)[..., None]
+        C = fg[..., None] * C + ig[..., None] * jnp.einsum(
+            "bhv,bhk->bhvk", vt, kt)
+        n = fg * n + ig * kt
+        num = jnp.einsum("bhvk,bhk->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)),
+                          jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), num / den
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+               for t in (q, k, v, li, lf))
+    (C, n, m), hs = jax.lax.scan(jax.checkpoint(body), state0, xs)
+    return jnp.moveaxis(hs, 0, 1), (C, n, m)
+
+
+def mlstm_state0(cfg, batch):
+    _, H, dh = xlstm_dims(cfg)
+    return (jnp.zeros((batch, H, dh, dh), jnp.float32),
+            jnp.zeros((batch, H, dh), jnp.float32),
+            jnp.full((batch, H), -1e30, jnp.float32))
+
+
+def apply_mlstm(cfg, p, x, rules, state0=None, return_state=False):
+    B, S, E = x.shape
+    d_inner, H, dh = xlstm_dims(cfg)
+    up = x @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    xm = rules.constrain(xm, "batch", "seq", "act_ff")
+    q = (xm @ p["w_q"]).reshape(B, S, H, dh)
+    k = (xm @ p["w_k"]).reshape(B, S, H, dh) / jnp.sqrt(float(dh))
+    v = (xm @ p["w_v"]).reshape(B, S, H, dh)
+    gates = xm.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    li, lf = gates[..., :H], jax.nn.log_sigmoid(gates[..., H:])
+    if state0 is None:
+        state0 = mlstm_state0(cfg, B)
+    h, state = _mlstm_scan(q, k, v, li, lf, state0)
+    h = h.reshape(B, S, d_inner)
+    var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    h = h * jax.lax.rsqrt(var + 1e-5) * (1.0 + p["norm"].astype(jnp.float32))
+    h = h * jax.nn.silu(z.astype(jnp.float32))
+    out = h.astype(x.dtype) @ p["w_down"]
+    if return_state:
+        return out, state
+    return out
+
+
+def decode_mlstm(cfg, p, x, state, rules):
+    """x: (B,E); single-step mLSTM."""
+    out, new_state = apply_mlstm(cfg, p, x[:, None, :], rules,
+                                 state0=state, return_state=True)
+    return out[:, 0], new_state
+
+
+# ------------------------------------------------------------------- sLSTM
+def init_slstm(cfg, key):
+    dt = dtype_of(cfg)
+    E = cfg.d_model
+    d_inner, H, dh = xlstm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_up": dense_init(ks[0], E, (E, 2 * d_inner), dt),
+        "w_g": dense_init(ks[1], d_inner, (d_inner, 4 * d_inner), jnp.float32),
+        "r_g": dense_init(ks[2], dh, (H, dh, 4 * dh), jnp.float32),
+        "b_g": jnp.zeros((4 * d_inner,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), dt),
+        "w_down": dense_init(ks[3], d_inner, (d_inner, E), dt),
+    }
+
+
+SLSTM_SPECS = {
+    "w_up": ("w_embed", "ff"), "w_g": ("ff", None), "r_g": (None, None, None),
+    "b_g": (None,), "norm": ("ff",), "w_down": ("ff", "w_embed"),
+}
+
+
+def slstm_state0(cfg, batch):
+    d_inner, H, dh = xlstm_dims(cfg)
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return (z, z, jnp.full((batch, H, dh), -1e30, jnp.float32), z)  # c,n,m,h
+
+
+def _slstm_scan(wx, r_g, state0):
+    """wx: (B,S,4*d_inner) input-side gate preactivations."""
+    B, S, _ = wx.shape
+    H, dh, _ = r_g.shape
+
+    def body(carry, xt):
+        c, n, m, h = carry                         # (B,H,dh) each
+        rec = jnp.einsum("bhd,hdg->bhg", h, r_g)   # (B,H,4*dh)
+        g = xt.reshape(B, 4, H, dh).transpose(0, 2, 1, 3)  # (B,H,4,dh)
+        rec = rec.reshape(B, H, 4, dh)
+        pre = g + rec
+        li, lf = pre[..., 0, :], jax.nn.log_sigmoid(pre[..., 1, :])
+        zt, ot = jnp.tanh(pre[..., 2, :]), jax.nn.sigmoid(pre[..., 3, :])
+        m_new = jnp.maximum(lf + m, li)
+        ig = jnp.exp(li - m_new)
+        fg = jnp.exp(lf + m - m_new)
+        c = fg * c + ig * zt
+        n = jnp.maximum(fg * n + ig, 1e-6)
+        h = ot * (c / n)
+        return (c, n, m_new, h), h
+
+    xs = jnp.moveaxis(wx.astype(jnp.float32), 1, 0)
+    state, hs = jax.lax.scan(jax.checkpoint(body), state0, xs)
+    return jnp.moveaxis(hs, 0, 1), state           # (B,S,H,dh)
+
+
+def apply_slstm(cfg, p, x, rules, state0=None, return_state=False):
+    B, S, E = x.shape
+    d_inner, H, dh = xlstm_dims(cfg)
+    up = x @ p["w_up"]
+    xs_, z = jnp.split(up, 2, axis=-1)
+    xs_ = rules.constrain(xs_, "batch", "seq", "act_ff")
+    wx = xs_.astype(jnp.float32) @ p["w_g"] + p["b_g"]
+    if state0 is None:
+        state0 = slstm_state0(cfg, B)
+    h, state = _slstm_scan(wx, p["r_g"], state0)
+    h = h.reshape(B, S, d_inner)
+    var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    h = h * jax.lax.rsqrt(var + 1e-5) * (1.0 + p["norm"].astype(jnp.float32))
+    h = h * jax.nn.silu(z.astype(jnp.float32))
+    out = h.astype(x.dtype) @ p["w_down"]
+    if return_state:
+        return out, state
+    return out
+
+
+def decode_slstm(cfg, p, x, state, rules):
+    out, new_state = apply_slstm(cfg, p, x[:, None, :], rules,
+                                 state0=state, return_state=True)
+    return out[:, 0], new_state

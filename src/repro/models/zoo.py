@@ -1,0 +1,553 @@
+"""Model zoo: one unified API over the 10 assigned architectures.
+
+Model protocol
+  init(key) -> params
+  param_specs() -> pytree of logical-axis tuples (mirrors params)
+  loss_fn(params, batch, rules) -> (loss, metrics)          [train_4k]
+  prefill(params, batch, rules) -> (last_logits, caches)    [prefill_32k]
+  decode_step(params, caches, tokens, pos, rules)
+      -> (logits, caches)                                   [decode_* cells]
+  init_cache(batch, seq_len) / cache_specs() for serving state.
+
+Embedding tables are vocab-sharded ("vocab" -> model axis); tied models reuse
+the table for logits (local matmul on the vocab shard). Loss keeps logits
+vocab-sharded and masks padded vocab rows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.common import (
+    make_embedding, embed_tokens, make_norm_params, apply_norm, dense_init,
+    sinusoidal_positions, dtype_of,
+)
+from repro.models.mamba2 import (
+    init_mamba, MAMBA_SPECS, apply_mamba, decode_mamba, init_mamba_cache,
+    mamba_dims,
+)
+from repro.models.xlstm import (
+    init_mlstm, init_slstm, MLSTM_SPECS, SLSTM_SPECS, apply_mlstm,
+    apply_slstm, decode_mlstm, decode_slstm, mlstm_state0, slstm_state0,
+)
+
+EMB_SPECS = {"tok": ("vocab", "w_embed")}
+WHISPER_ENC_LEN = 1500      # standard whisper frame count (30 s @ 50 Hz)
+
+
+def softmax_xent(cfg, logits, targets, rules):
+    """logits: (B,S,Vp) f32 (kept vocab-sharded); targets: (B,S), -1 = masked."""
+    logits = rules.constrain(logits, "batch", "seq", "act_vocab")
+    if cfg.padded_vocab != cfg.vocab_size:
+        vocab_ok = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(vocab_ok, logits, -1e30)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(
+        logits, jnp.maximum(targets, 0)[..., None], axis=-1)[..., 0]
+    valid = (targets >= 0).astype(jnp.float32)
+    loss = jnp.sum((lse - tgt) * valid) / jnp.maximum(valid.sum(), 1.0)
+    return loss
+
+
+def _logits(cfg, params, x, rules):
+    table = params["unemb"] if "unemb" in params else params["emb"]["tok"]
+    logits = jnp.einsum("bse,ve->bsv", x, table).astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return rules.constrain(logits, "batch", "seq", "act_vocab")
+
+
+class BaseModel:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def _final(self, params, x):
+        return apply_norm(self.cfg, params["ln_f"], x)
+
+    def metrics_from_loss(self, loss):
+        return {"loss": loss}
+
+
+# ---------------------------------------------------------------- decoder LMs
+class DecoderLM(BaseModel):
+    """Dense / MoE / VLM decoder-only LM (llama, nemotron, gemma, minitron,
+    paligemma, arctic, granite)."""
+
+    def init(self, key):
+        cfg = self.cfg
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p = {"emb": make_embedding(cfg, k1),
+             "layers": T.stack_init(
+                 lambda k: T.init_dense_layer(cfg, k), k2, cfg.num_layers),
+             "ln_f": make_norm_params(cfg, k3, cfg.d_model)}
+        if not cfg.tie_embeddings:
+            p["unemb"] = dense_init(k4, cfg.d_model,
+                                    (cfg.padded_vocab, cfg.d_model),
+                                    dtype_of(cfg))
+        return p
+
+    def param_specs(self):
+        cfg = self.cfg
+        p = {"emb": EMB_SPECS,
+             "layers": T.stacked_specs(T.dense_layer_specs(cfg)),
+             "ln_f": T.norm_specs(cfg)}
+        if not cfg.tie_embeddings:
+            p["unemb"] = ("vocab", "w_embed")
+        return p
+
+    def _inputs(self, params, batch, rules):
+        cfg = self.cfg
+        x = embed_tokens(cfg, params["emb"], batch["tokens"], rules)
+        prefix_len = 0
+        if cfg.num_prefix_tokens and "prefix" in batch:
+            prefix = batch["prefix"].astype(x.dtype)
+            x = jnp.concatenate([prefix, x], axis=1)
+            prefix_len = prefix.shape[1]
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        return x, positions, prefix_len
+
+    def loss_fn(self, params, batch, rules):
+        cfg = self.cfg
+        x, positions, prefix_len = self._inputs(params, batch, rules)
+        x, aux = T.run_stack(cfg, params["layers"], x, positions, rules,
+                             causal=True, prefix_len=prefix_len)
+        x = self._final(params, x)
+        if prefix_len:
+            x = x[:, prefix_len:]
+        logits = _logits(cfg, params, x, rules)
+        loss = softmax_xent(cfg, logits, batch["targets"], rules)
+        metrics = {"xent": loss}
+        if aux is not None:
+            loss = loss + 0.01 * aux["lb_loss"] + 1e-3 * aux["router_z"]
+            metrics.update(lb_loss=aux["lb_loss"],
+                           dropped_frac=aux["dropped_frac"],
+                           expert_load_max=aux["expert_load"].max())
+        metrics["loss"] = loss
+        return loss, metrics
+
+    def prefill(self, params, batch, rules):
+        cfg = self.cfg
+        x, positions, prefix_len = self._inputs(params, batch, rules)
+        x, caches = T.run_stack_prefill(cfg, params["layers"], x, positions,
+                                        rules, causal=True,
+                                        prefix_len=prefix_len)
+        x = self._final(params, x[:, -1:])
+        logits = _logits(cfg, params, x, rules)[:, 0]
+        return logits, caches
+
+    def init_cache(self, batch, seq_len, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        shape = (cfg.num_layers, batch, seq_len, cfg.num_kv_heads,
+                 cfg.head_dim)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+    def cache_specs(self):
+        kv = (None, "batch", "kv_seq", "kv_heads", None)
+        return {"k": kv, "v": kv}
+
+    def decode_step(self, params, caches, tokens, pos, rules):
+        cfg = self.cfg
+        x = embed_tokens(cfg, params["emb"], tokens[:, None], rules)
+        # caches' layer-stacked scan; pos offset by prefix for VLM is folded
+        # into pos by the caller (prefix lives at cache[:prefix_len]).
+        x, caches = T.run_stack_decode(cfg, params["layers"], x, caches, pos,
+                                       rules)
+        x = self._final(params, x)
+        logits = _logits(cfg, params, x, rules)[:, 0]
+        return logits, caches
+
+
+# ----------------------------------------------------------------- enc-dec LM
+class EncDecLM(BaseModel):
+    """Whisper-family: encoder over (stubbed) audio frames, causal decoder
+    with cross-attention."""
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+        return {
+            "emb": make_embedding(cfg, ks[0]),
+            "enc": T.stack_init(lambda k: T.init_dense_layer(cfg, k),
+                                ks[1], cfg.encoder_layers),
+            "ln_enc": make_norm_params(cfg, ks[2], cfg.d_model),
+            "dec": T.stack_init(lambda k: T.init_dense_layer(cfg, k,
+                                                             cross=True),
+                                ks[3], cfg.num_layers),
+            "ln_f": make_norm_params(cfg, ks[4], cfg.d_model),
+        }
+
+    def param_specs(self):
+        cfg = self.cfg
+        ns = T.norm_specs(cfg)
+        return {"emb": EMB_SPECS,
+                "enc": T.stacked_specs(T.dense_layer_specs(cfg)),
+                "ln_enc": ns,
+                "dec": T.stacked_specs(T.dense_layer_specs(cfg, cross=True)),
+                "ln_f": ns}
+
+    def encode(self, params, frames, rules):
+        cfg = self.cfg
+        B, Se, E = frames.shape
+        x = frames.astype(dtype_of(cfg)) + sinusoidal_positions(
+            Se, E).astype(dtype_of(cfg))
+        x = rules.constrain(x, "batch", "seq", "embed")
+        positions = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+        x, _ = T.run_stack(cfg, params["enc"], x, positions, rules,
+                           causal=False)
+        return apply_norm(cfg, params["ln_enc"], x), positions
+
+    def _dec_inputs(self, params, tokens, rules, offset=0):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = embed_tokens(cfg, params["emb"], tokens, rules)
+        x = x + sinusoidal_positions(S, cfg.d_model,
+                                     offset=offset).astype(x.dtype)
+        positions = offset + jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32), (B, S))
+        return x, positions
+
+    def loss_fn(self, params, batch, rules):
+        cfg = self.cfg
+        enc_out, enc_pos = self.encode(params, batch["enc_frames"], rules)
+        x, positions = self._dec_inputs(params, batch["tokens"], rules)
+        x, _ = T.run_stack(cfg, params["dec"], x, positions, rules,
+                           causal=True, enc_out=enc_out,
+                           enc_positions=enc_pos)
+        x = self._final(params, x)
+        logits = _logits(cfg, params, x, rules)
+        loss = softmax_xent(cfg, logits, batch["targets"], rules)
+        return loss, {"loss": loss, "xent": loss}
+
+    def prefill(self, params, batch, rules):
+        cfg = self.cfg
+        enc_out, enc_pos = self.encode(params, batch["enc_frames"], rules)
+        x, positions = self._dec_inputs(params, batch["tokens"], rules)
+        x, caches = T.run_stack_prefill(cfg, params["dec"], x, positions,
+                                        rules, causal=True, enc_out=enc_out,
+                                        enc_positions=enc_pos)
+        x = self._final(params, x[:, -1:])
+        logits = _logits(cfg, params, x, rules)[:, 0]
+        return logits, caches
+
+    def init_cache(self, batch, seq_len, dtype=jnp.bfloat16,
+                   enc_len=WHISPER_ENC_LEN):
+        cfg = self.cfg
+        kv = (cfg.num_layers, batch, seq_len, cfg.num_kv_heads, cfg.head_dim)
+        xkv = (cfg.num_layers, batch, enc_len, cfg.num_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+                "xk": jnp.zeros(xkv, dtype), "xv": jnp.zeros(xkv, dtype)}
+
+    def cache_specs(self):
+        kv = (None, "batch", "kv_seq", "kv_heads", None)
+        xkv = (None, "batch", None, "kv_heads", None)
+        return {"k": kv, "v": kv, "xk": xkv, "xv": xkv}
+
+    def decode_step(self, params, caches, tokens, pos, rules):
+        cfg = self.cfg
+        S = caches["k"].shape[2]
+        x = embed_tokens(cfg, params["emb"], tokens[:, None], rules)
+        postab = sinusoidal_positions(S, cfg.d_model)
+        x = x + jax.lax.dynamic_slice_in_dim(postab, pos, 1).astype(x.dtype)
+        x, caches = T.run_stack_decode(cfg, params["dec"], x, caches, pos,
+                                       rules)
+        x = self._final(params, x)
+        logits = _logits(cfg, params, x, rules)[:, 0]
+        return logits, caches
+
+
+# ----------------------------------------------------------------- hybrid LM
+class HybridLM(BaseModel):
+    """Zamba2-style: Mamba2 backbone + one shared attention/MLP block applied
+    every `attn_period` layers (shared weights, per-application KV cache)."""
+
+    def group_sizes(self):
+        cfg = self.cfg
+        period = cfg.attn_period
+        sizes = []
+        left = cfg.num_layers
+        while left > 0:
+            sizes.append(min(period, left))
+            left -= period
+        return sizes
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 5)
+
+        def init_block(k):
+            k1, k2 = jax.random.split(k)
+            return {"ln": make_norm_params(cfg, k1, cfg.d_model),
+                    "mamba": init_mamba(cfg, k2)}
+
+        return {"emb": make_embedding(cfg, ks[0]),
+                "layers": T.stack_init(init_block, ks[1], cfg.num_layers),
+                "shared": T.init_dense_layer(cfg, ks[2]),
+                "ln_f": make_norm_params(cfg, ks[3], cfg.d_model)}
+
+    def param_specs(self):
+        cfg = self.cfg
+        block = {"ln": T.norm_specs(cfg), "mamba": dict(MAMBA_SPECS)}
+        return {"emb": EMB_SPECS,
+                "layers": T.stacked_specs(block),
+                "shared": T.dense_layer_specs(cfg),
+                "ln_f": T.norm_specs(cfg)}
+
+    def _backbone(self, params, x, positions, rules, collect=False):
+        cfg = self.cfg
+        caches = {"k": [], "v": [], "mamba": []}
+        idx = 0
+        for size in self.group_sizes():
+            if collect:
+                h = apply_norm(cfg, params["shared"]["ln1"], x)
+                o, kv = T.attn_sublayer(cfg, params["shared"]["attn"], h,
+                                        positions, rules, causal=True,
+                                        return_kv=True)
+                caches["k"].append(kv[0])
+                caches["v"].append(kv[1])
+                x = x + o
+                h = apply_norm(cfg, params["shared"]["ln2"], x)
+                from repro.models.mlp import apply_mlp
+                x = x + apply_mlp(cfg, params["shared"]["mlp"], h, rules)
+            else:
+                x, _, _ = T.apply_dense_layer(cfg, params["shared"], x,
+                                              positions, rules, causal=True)
+            sl = jax.tree.map(lambda a: a[idx:idx + size], params["layers"])
+
+            def body(h, p):
+                if collect:
+                    o, cache = apply_mamba(cfg, p["mamba"],
+                                           apply_norm(cfg, p["ln"], h), rules,
+                                           return_cache=True)
+                    return h + o, cache
+                o = apply_mamba(cfg, p["mamba"], apply_norm(cfg, p["ln"], h),
+                                rules)
+                return h + o, None
+
+            x, mc = jax.lax.scan(jax.checkpoint(body), x, sl)
+            if collect:
+                caches["mamba"].append(mc)
+            idx += size
+        if collect:
+            caches["k"] = jnp.stack(caches["k"])      # (n_apps,B,S,Hkv,D)
+            caches["v"] = jnp.stack(caches["v"])
+            caches["mamba"] = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs), *caches["mamba"])
+            return x, caches
+        return x, None
+
+    def loss_fn(self, params, batch, rules):
+        cfg = self.cfg
+        x = embed_tokens(cfg, params["emb"], batch["tokens"], rules)
+        B, S = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x, _ = self._backbone(params, x, positions, rules)
+        x = self._final(params, x)
+        logits = _logits(cfg, params, x, rules)
+        loss = softmax_xent(cfg, logits, batch["targets"], rules)
+        return loss, {"loss": loss, "xent": loss}
+
+    def prefill(self, params, batch, rules):
+        cfg = self.cfg
+        x = embed_tokens(cfg, params["emb"], batch["tokens"], rules)
+        B, S = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x, caches = self._backbone(params, x, positions, rules, collect=True)
+        x = self._final(params, x[:, -1:])
+        logits = _logits(cfg, params, x, rules)[:, 0]
+        return logits, caches
+
+    def init_cache(self, batch, seq_len, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        n_apps = len(self.group_sizes())
+        kv = (n_apps, batch, seq_len, cfg.num_kv_heads, cfg.head_dim)
+        mamba = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[init_mamba_cache(cfg, batch, dtype)
+              for _ in range(cfg.num_layers)])
+        return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+                "mamba": mamba}
+
+    def cache_specs(self):
+        kv = (None, "batch", "kv_seq", "kv_heads", None)
+        mamba = {"state": (None, "batch", "heads", None, None),
+                 "conv_x": (None, "batch", None, "ff"),
+                 "conv_B": (None, "batch", None, None),
+                 "conv_C": (None, "batch", None, None)}
+        return {"k": kv, "v": kv, "mamba": mamba}
+
+    def decode_step(self, params, caches, tokens, pos, rules):
+        cfg = self.cfg
+        x = embed_tokens(cfg, params["emb"], tokens[:, None], rules)
+        idx = 0
+        new_k, new_v, new_mamba = [], [], []
+        for g, size in enumerate(self.group_sizes()):
+            h = apply_norm(cfg, params["shared"]["ln1"], x)
+            o, kc, vc = T.attn_decode_sublayer(
+                cfg, params["shared"]["attn"], h, caches["k"][g],
+                caches["v"][g], pos, rules)
+            new_k.append(kc)
+            new_v.append(vc)
+            x = x + o
+            h = apply_norm(cfg, params["shared"]["ln2"], x)
+            from repro.models.mlp import apply_mlp
+            x = x + apply_mlp(cfg, params["shared"]["mlp"], h, rules)
+            sl = jax.tree.map(lambda a: a[idx:idx + size], params["layers"])
+            mc = jax.tree.map(lambda a: a[idx:idx + size], caches["mamba"])
+
+            def body(h, inp):
+                p, cache = inp
+                o, cache = decode_mamba(cfg, p["mamba"],
+                                        apply_norm(cfg, p["ln"], h[:, 0]),
+                                        cache, rules)
+                return h + o[:, None], cache
+
+            x, mc_new = jax.lax.scan(body, x, (sl, mc))
+            new_mamba.append(mc_new)
+            idx += size
+        x = self._final(params, x)
+        logits = _logits(cfg, params, x, rules)[:, 0]
+        caches = {"k": jnp.stack(new_k), "v": jnp.stack(new_v),
+                  "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                                        *new_mamba)}
+        return logits, caches
+
+
+# ------------------------------------------------------------------ xLSTM LM
+class XLSTMLM(BaseModel):
+    """Alternating mLSTM / sLSTM blocks (xLSTM), pre-norm residual."""
+
+    def block_kinds(self):
+        cfg = self.cfg
+        kinds = [cfg.block_types[i % len(cfg.block_types)]
+                 for i in range(cfg.num_layers)]
+        return kinds
+
+    def init(self, key):
+        cfg = self.cfg
+        kinds = self.block_kinds()
+        n_m = kinds.count("mlstm")
+        n_s = kinds.count("slstm")
+        ks = jax.random.split(key, 5)
+
+        def wrap(init_fn):
+            def f(k):
+                k1, k2 = jax.random.split(k)
+                return {"ln": make_norm_params(cfg, k1, cfg.d_model),
+                        "cell": init_fn(cfg, k2)}
+            return f
+
+        return {"emb": make_embedding(cfg, ks[0]),
+                "mlstm": T.stack_init(wrap(init_mlstm), ks[1], n_m),
+                "slstm": T.stack_init(wrap(init_slstm), ks[2], n_s),
+                "ln_f": make_norm_params(cfg, ks[3], cfg.d_model)}
+
+    def param_specs(self):
+        cfg = self.cfg
+        ns = T.norm_specs(cfg)
+        return {"emb": EMB_SPECS,
+                "mlstm": T.stacked_specs({"ln": ns, "cell": dict(MLSTM_SPECS)}),
+                "slstm": T.stacked_specs({"ln": ns, "cell": dict(SLSTM_SPECS)}),
+                "ln_f": ns}
+
+    def _forward(self, params, x, rules, states=None, collect=False):
+        cfg = self.cfg
+        kinds = self.block_kinds()
+        counters = {"mlstm": 0, "slstm": 0}
+        new_states = {"mlstm": [], "slstm": []}
+        for kind in kinds:
+            i = counters[kind]
+            counters[kind] += 1
+            p = jax.tree.map(lambda a: a[i], params[kind])
+            h = apply_norm(cfg, p["ln"], x)
+            fn = apply_mlstm if kind == "mlstm" else apply_slstm
+            s0 = None if states is None else jax.tree.map(
+                lambda a: a[i], states[kind], is_leaf=None)
+            if collect:
+                o, st = fn(cfg, p["cell"], h, rules, state0=s0,
+                           return_state=True)
+                new_states[kind].append(st)
+            else:
+                o = fn(cfg, p["cell"], h, rules, state0=s0)
+            x = x + o
+        if collect:
+            stacked = {k: jax.tree.map(lambda *xs: jnp.stack(xs), *v)
+                       for k, v in new_states.items() if v}
+            return x, stacked
+        return x, None
+
+    def loss_fn(self, params, batch, rules):
+        cfg = self.cfg
+        x = embed_tokens(cfg, params["emb"], batch["tokens"], rules)
+        x, _ = self._forward(params, x, rules)
+        x = self._final(params, x)
+        logits = _logits(cfg, params, x, rules)
+        loss = softmax_xent(cfg, logits, batch["targets"], rules)
+        return loss, {"loss": loss, "xent": loss}
+
+    def prefill(self, params, batch, rules):
+        cfg = self.cfg
+        x = embed_tokens(cfg, params["emb"], batch["tokens"], rules)
+        x, states = self._forward(params, x, rules, collect=True)
+        x = self._final(params, x[:, -1:])
+        logits = _logits(cfg, params, x, rules)[:, 0]
+        return logits, states
+
+    def init_cache(self, batch, seq_len=None, dtype=jnp.float32):
+        cfg = self.cfg
+        kinds = self.block_kinds()
+        n_m, n_s = kinds.count("mlstm"), kinds.count("slstm")
+        out = {}
+        if n_m:
+            out["mlstm"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[mlstm_state0(cfg, batch) for _ in range(n_m)])
+        if n_s:
+            out["slstm"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[slstm_state0(cfg, batch) for _ in range(n_s)])
+        return out
+
+    def cache_specs(self):
+        m = ((None, "batch", None, None, None), (None, "batch", None, None),
+             (None, "batch", None))
+        sv = (None, "batch", None, None)
+        return {"mlstm": m, "slstm": (sv, sv, sv, sv)}
+
+    def decode_step(self, params, caches, tokens, pos, rules):
+        cfg = self.cfg
+        x = embed_tokens(cfg, params["emb"], tokens[:, None], rules)[:, 0]
+        kinds = self.block_kinds()
+        counters = {"mlstm": 0, "slstm": 0}
+        new_states = {"mlstm": [], "slstm": []}
+        for kind in kinds:
+            i = counters[kind]
+            counters[kind] += 1
+            p = jax.tree.map(lambda a: a[i], params[kind])
+            st = jax.tree.map(lambda a: a[i], caches[kind])
+            h = apply_norm(cfg, p["ln"], x)
+            fn = decode_mlstm if kind == "mlstm" else decode_slstm
+            o, st = fn(cfg, p["cell"], h, st, rules)
+            new_states[kind].append(st)
+            x = x + o
+        x = self._final(params, x[:, None])
+        logits = _logits(cfg, params, x, rules)[:, 0]
+        caches = {k: jax.tree.map(lambda *xs: jnp.stack(xs), *v)
+                  for k, v in new_states.items() if v}
+        return logits, caches
+
+
+def build_model(cfg):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg)
+    if cfg.family == "audio":
+        return EncDecLM(cfg)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg)
+    if cfg.family == "ssm":
+        return XLSTMLM(cfg)
+    raise KeyError(cfg.family)

@@ -1,0 +1,127 @@
+"""Batched serving engine: prefill + decode loop with a host-side request
+queue (static-batch continuous-batching-lite: finished slots are refilled
+from the queue at each refill interval).
+"""
+from __future__ import annotations
+
+import collections
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import NULL_RULES
+
+
+class ServeEngine:
+    def __init__(self, model, params, rules=NULL_RULES, max_seq=512,
+                 eos_id=None, temperature=0.0):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.rules = rules
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.temperature = temperature
+
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, rules))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, c, t, pos, rules),
+            donate_argnums=(1,))
+
+    def _sample(self, logits, key):
+        logits = logits[..., :self.cfg.vocab_size]
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.temperature).astype(jnp.int32)
+
+    def generate(self, prompts, n_tokens, seed=0, extra_batch=None):
+        """prompts: (B, S_prompt) int32 np. Returns (B, n_tokens) int32.
+
+        Runs prefill once, then n_tokens decode steps against the growing
+        cache (cache buffers donated each step)."""
+        prompts = np.asarray(prompts)
+        B, S = prompts.shape
+        total = S + n_tokens
+        assert total <= self.max_seq
+
+        batch = {"tokens": jnp.asarray(prompts)}
+        if extra_batch:
+            batch.update(extra_batch)
+        logits, pf_caches = self._prefill(self.params, batch)
+
+        # decode caches sized to max_seq; copy prefill KV in
+        kwargs = {}
+        if self.cfg.is_enc_dec:
+            kwargs["enc_len"] = pf_caches["xk"].shape[2]
+        if self.cfg.family in ("dense", "moe", "vlm", "audio", "hybrid"):
+            caches = self.model.init_cache(B, self.max_seq, **kwargs)
+            for k in pf_caches:
+                if k in ("k", "v", "xk", "xv"):
+                    src = pf_caches[k].astype(caches[k].dtype)
+                    caches[k] = jax.lax.dynamic_update_slice(
+                        caches[k], src, (0, 0, 0, 0, 0))
+                else:
+                    caches[k] = pf_caches[k]
+        else:   # recurrent state: prefill states ARE the cache
+            caches = pf_caches
+
+        key = jax.random.key(seed)
+        prefix_off = (self.cfg.num_prefix_tokens
+                      if self.cfg.num_prefix_tokens else 0)
+        out = np.zeros((B, n_tokens), np.int32)
+        key, k0 = jax.random.split(key)
+        tok = self._sample(logits, k0)
+        out[:, 0] = np.asarray(tok)
+        for i in range(1, n_tokens):
+            pos = prefix_off + S + i - 1
+            key, ki = jax.random.split(key)
+            logits, caches = self._decode(self.params, caches, tok,
+                                          jnp.int32(pos))
+            tok = self._sample(logits, ki)
+            out[:, i] = np.asarray(tok)
+        return out
+
+
+class RequestQueue:
+    """Host-side batched request pump: collects requests, serves them in
+    fixed-size batches (the serving analogue of the paper's slave pull
+    queue)."""
+
+    def __init__(self, engine, batch_size, prompt_len, n_tokens):
+        self.engine = engine
+        self.batch_size = batch_size
+        self.prompt_len = prompt_len
+        self.n_tokens = n_tokens
+        self._queue = collections.deque()
+        self._results = {}
+        self._next_id = 0
+
+    def submit(self, prompt):
+        rid = self._next_id
+        self._next_id += 1
+        p = np.asarray(prompt, np.int32)[:self.prompt_len]
+        p = np.pad(p, (0, self.prompt_len - len(p)))
+        self._queue.append((rid, p))
+        return rid
+
+    def pump(self):
+        """Serve one full (padded) batch from the queue."""
+        if not self._queue:
+            return []
+        batch, rids = [], []
+        while self._queue and len(batch) < self.batch_size:
+            rid, p = self._queue.popleft()
+            rids.append(rid)
+            batch.append(p)
+        while len(batch) < self.batch_size:      # pad with copies
+            batch.append(batch[-1])
+        toks = self.engine.generate(np.stack(batch), self.n_tokens)
+        for i, rid in enumerate(rids):
+            self._results[rid] = toks[i]
+        return rids
+
+    def result(self, rid):
+        return self._results.get(rid)

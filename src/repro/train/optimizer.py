@@ -1,0 +1,139 @@
+"""Hand-rolled AdamW with optional 8-bit first moment (block-quantized) and
+f32 master weights. No optax dependency — the optimizer state layout must be
+shardable by our logical rules and checkpointable by repro.ckpt.
+
+State layout (pytree mirroring params):
+  master : f32 master copy of the (bf16) params
+  m      : first moment  — f32, or {"codes": int8, "scale": f32} if quantized
+  v      : second moment — f32, or bf16 if quantized ("8-bit Adam" profile)
+  step   : scalar int32
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import compression as C
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    quantize_state: bool = False     # 8-bit m / bf16 v (memory compression)
+
+
+def schedule(cfg: OptConfig, step):
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(cfg: OptConfig, params):
+    def init_m(p):
+        if cfg.quantize_state:
+            return {"codes": jnp.zeros(p.shape, jnp.int8),
+                    "scale": jnp.full(p.shape[:-1], 1e-12, jnp.float32)}
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def init_v(p):
+        dt = jnp.bfloat16 if cfg.quantize_state else jnp.float32
+        return jnp.zeros(p.shape, dt)
+
+    return {
+        # copy=True: an f32 param would otherwise ALIAS its master (eager
+        # astype is a no-op) and donation would see the same buffer twice
+        "master": jax.tree.map(
+            lambda p: jnp.array(p, jnp.float32, copy=True), params),
+        "m": jax.tree.map(init_m, params),
+        "v": jax.tree.map(init_v, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def _is_m_leaf(x):
+    return isinstance(x, dict) and "codes" in x
+
+
+def apply_updates(cfg: OptConfig, params, opt_state, grads):
+    """One AdamW step. Returns (new bf16 params, new opt state, metrics)."""
+    grads, gn = clip_by_global_norm(grads, cfg.clip_norm)
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p_master, m, v, g):
+        g32 = g.astype(jnp.float32)
+        if _is_m_leaf(m):
+            m_val = C.dequantize_rowwise_int8(m["codes"], m["scale"])
+        else:
+            m_val = m
+        m_new = b1 * m_val + (1 - b1) * g32
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        new_master = p_master - lr * (delta + cfg.weight_decay * p_master)
+        if _is_m_leaf(m):
+            codes, scale = C.quantize_rowwise_int8(m_new)
+            m_out = {"codes": codes, "scale": scale}
+            v_out = v_new.astype(jnp.bfloat16)
+        else:
+            m_out, v_out = m_new, v_new
+        return new_master, m_out, v_out
+
+    flat_p, tree = jax.tree.flatten(opt_state["master"])
+    flat_m = tree.flatten_up_to(opt_state["m"])
+    flat_v = tree.flatten_up_to(opt_state["v"])
+    flat_g = tree.flatten_up_to(grads)
+    new = [upd(p, m, v, g) for p, m, v, g in
+           zip(flat_p, flat_m, flat_v, flat_g)]
+    new_master = tree.unflatten([t[0] for t in new])
+    new_m = tree.unflatten([t[1] for t in new])
+    new_v = tree.unflatten([t[2] for t in new])
+    new_params = jax.tree.map(
+        lambda master, p: master.astype(p.dtype), new_master, params)
+    new_state = {"master": new_master, "m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"grad_norm": gn, "lr": lr}
+
+
+def opt_state_specs(param_specs, quantize_state=False):
+    """Logical-axis specs for the optimizer state (mirrors init_opt_state).
+
+    Quantized m codes keep the tensor shape -> inherit the param spec; the
+    per-row scales drop the last axis."""
+    is_leaf = lambda v: isinstance(v, tuple)
+    if quantize_state:
+        m = jax.tree.map(lambda t: {"codes": t, "scale": t[:-1]},
+                         param_specs, is_leaf=is_leaf)
+    else:
+        m = param_specs
+    return {"master": param_specs, "m": m, "v": param_specs, "step": ()}

@@ -1,0 +1,82 @@
+"""Train-step builder: loss -> grads (with optional microbatch accumulation
+and int8-EF gradient compression) -> clipped AdamW update.
+
+The returned function is pure and donation-friendly:
+  train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+and is jit'd by the caller with in/out shardings from the logical rules
+(see launch/train.py and launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import optimizer as O
+from repro.train import compression as C
+
+
+def _split_microbatches(batch, n):
+    def sp(x):
+        return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(model, rules, opt_cfg: O.OptConfig, num_microbatches=1,
+                    compress_grads=False):
+    def loss_fn(params, batch):
+        loss, metrics = model.loss_fn(params, batch, rules)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if num_microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        mb = _split_microbatches(batch, num_microbatches)
+
+        def body(acc, mbatch):
+            (loss, metrics), grads = grad_fn(params, mbatch)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                               acc, grads)
+            return acc, (loss, metrics)
+
+        acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        acc, (losses, metricses) = jax.lax.scan(body, acc0, mb)
+        grads = jax.tree.map(lambda a: a / num_microbatches, acc)
+        metrics = jax.tree.map(jnp.mean, metricses)
+        return jnp.mean(losses), metrics, grads
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = compute_grads(params, batch)
+        if compress_grads:
+            grads, residuals = C.compress_grads_ef(
+                grads, opt_state["ef_residual"])
+        params, inner, opt_metrics = O.apply_updates(
+            opt_cfg, params, {k: v for k, v in opt_state.items()
+                              if k != "ef_residual"}, grads)
+        new_state = dict(inner)
+        if compress_grads:
+            new_state["ef_residual"] = residuals
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return params, new_state, metrics
+
+    return train_step
+
+
+def init_train_state(model, opt_cfg: O.OptConfig, key, compress_grads=False):
+    params = model.init(key)
+    opt_state = O.init_opt_state(opt_cfg, params)
+    if compress_grads:
+        opt_state["ef_residual"] = C.init_residuals(params)
+    return params, opt_state
+
+
+def train_state_specs(model, opt_cfg: O.OptConfig, compress_grads=False):
+    pspecs = model.param_specs()
+    ospecs = O.opt_state_specs(pspecs, opt_cfg.quantize_state)
+    if compress_grads:
+        ospecs["ef_residual"] = pspecs
+    return pspecs, ospecs

@@ -1,0 +1,147 @@
+"""Checkpoint roundtrip/corruption/async + fault-tolerance primitives."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.data.queue import WorkQueue
+from repro.ft.failure import (HeartbeatMonitor, StragglerDetector, plan_mesh)
+
+
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"w": jnp.ones((5,), jnp.bfloat16),
+                  "codes": (jnp.arange(6, dtype=jnp.int8),)},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_ckpt_roundtrip(tmp_path):
+    tree = _tree()
+    ckpt.save(tmp_path, 3, tree, meta={"cursor": 42})
+    restored, meta = ckpt.restore(tmp_path, 3, like=tree)
+    assert meta["cursor"] == 42
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_ckpt_async_and_latest_and_prune(tmp_path):
+    tree = _tree()
+    h = ckpt.save(tmp_path, 1, tree, async_save=True)
+    h.wait()
+    ckpt.save(tmp_path, 5, tree)
+    ckpt.save(tmp_path, 9, tree)
+    assert ckpt.latest_step(tmp_path) == 9
+    ckpt.prune_old(tmp_path, keep=2)
+    assert ckpt.latest_step(tmp_path) == 9
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(tmp_path, 1, like=tree)
+
+
+def test_ckpt_corruption_detected(tmp_path):
+    tree = _tree()
+    ckpt.save(tmp_path, 2, tree)
+    target = os.path.join(tmp_path, "step_2", "a.npy")
+    raw = bytearray(open(target, "rb").read())
+    raw[-1] ^= 0xFF
+    open(target, "wb").write(bytes(raw))
+    with pytest.raises(IOError, match="crc"):
+        ckpt.restore(tmp_path, 2, like=tree)
+
+
+def test_ckpt_restore_structure_mismatch(tmp_path):
+    ckpt.save(tmp_path, 1, {"x": jnp.ones(3)})
+    with pytest.raises(KeyError):
+        ckpt.restore(tmp_path, 1, like={"y": jnp.ones(3)})
+
+
+# ------------------------------------------------------------------ queue/ft
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_work_queue_lease_complete_expire():
+    clock = FakeClock()
+    q = WorkQueue(10, lease_timeout_s=5.0, clock=clock)
+    ids = q.lease("w1", max_items=3)
+    assert ids == [0, 1, 2]
+    q.complete([0, 1])
+    clock.t = 10.0                     # lease on 2 expires -> redelivered
+    ids2 = q.lease("w2", max_items=10)
+    assert 2 in ids2
+    assert q.redeliveries == 1
+    q.complete(ids2)
+    assert q.finished
+
+
+def test_work_queue_fail_worker_and_resume():
+    clock = FakeClock()
+    q = WorkQueue(6, clock=clock)
+    q.lease("w1", 2)
+    q.lease("w2", 2)
+    q.complete([2, 3])
+    back = q.fail_worker("w1")
+    assert sorted(back) == [0, 1]
+    state = q.state()
+    q2 = WorkQueue.from_state(state, clock=clock)
+    remaining = []
+    while True:
+        got = q2.lease("w3", 2)
+        if not got:
+            break
+        remaining.extend(got)
+    assert sorted(remaining) == [0, 1, 4, 5]   # done items never re-issued
+
+
+def test_heartbeat_monitor():
+    clock = FakeClock()
+    hb = HeartbeatMonitor(timeout_s=3.0, clock=clock)
+    hb.beat("a")
+    hb.beat("b")
+    clock.t = 2.0
+    hb.beat("a")
+    clock.t = 4.0
+    assert hb.dead() == {"b"}
+    assert hb.alive() == {"a"}
+
+
+def test_straggler_detector():
+    clock = FakeClock()
+    sd = StragglerDetector(factor=2.0, min_history=5, clock=clock)
+    for i in range(10):
+        sd.start(i)
+        clock.t += 1.0
+        sd.complete(i)
+    sd.start("slow")
+    clock.t += 5.0                      # > 2 x p95(=1.0)
+    assert sd.stragglers() == ["slow"]
+
+
+def test_plan_mesh_elastic():
+    assert plan_mesh(512).shape == (2, 16, 16)
+    assert plan_mesh(256).shape == (16, 16)
+    p = plan_mesh(100)
+    assert p.shape == (6, 16) and "spare" in p.reason
+    assert plan_mesh(8).shape == (1, 8)
+
+
+def test_train_driver_checkpoint_restart(tmp_path):
+    """Integration: kill/restart resumes step count and data cursor."""
+    from repro.launch.train import main as train_main
+    d = str(tmp_path / "ck")
+    train_main(["--arch", "xlstm-125m", "--reduced", "--steps", "6",
+                "--batch", "2", "--seq", "32", "--ckpt-dir", d,
+                "--ckpt-every", "3", "--log-every", "100"])
+    assert ckpt.latest_step(d) == 6
+    final = train_main(["--arch", "xlstm-125m", "--reduced", "--steps", "9",
+                        "--batch", "2", "--seq", "32", "--ckpt-dir", d,
+                        "--resume", "--log-every", "100"])
+    assert final == 9

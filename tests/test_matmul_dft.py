@@ -1,0 +1,61 @@
+"""The matmul-DFT twin (dry-run/TPU path) must match the FFT oracle, and the
+pipeline must produce identical detector decisions under it."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.kernels.stft_dft.ref as R
+from repro.kernels import backend
+from repro.kernels.stft_dft import ops as O
+
+
+def test_stft_matmul_matches_fft():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(2, 40_000).astype(np.float32))
+    xp = O.pad_for_stft(x)
+    prev = R.MATMUL_DTYPE
+    try:
+        R.MATMUL_DTYPE = jnp.float32
+        zm = R.stft_matmul(xp)
+    finally:
+        R.MATMUL_DTYPE = prev
+    zr = R.stft_ref(xp)
+    err = float(jnp.max(jnp.abs(zm - zr))) / float(jnp.max(jnp.abs(zr)))
+    assert err < 1e-4, err
+
+
+def test_istft_matmul_roundtrip():
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(1, 33_000).astype(np.float32))
+    xp = O.pad_for_stft(x)
+    z = R.stft_ref(xp)
+    prev = R.MATMUL_DTYPE
+    try:
+        R.MATMUL_DTYPE = jnp.float32
+        xr = R.istft_matmul(z, xp.shape[1])
+    finally:
+        R.MATMUL_DTYPE = prev
+    cov = R.num_frames(xp.shape[1], 256, 128) * 128 + 128
+    np.testing.assert_allclose(np.asarray(xr[:, :cov]),
+                               np.asarray(xp[:, :cov]), atol=2e-4)
+
+
+def test_pipeline_masks_identical_under_matmul_backend():
+    """The dry-run path (matmul mode, bf16 streams) must reach the same
+    keep/remove decisions as the CPU fft path."""
+    from repro.configs import SERF_AUDIO as cfg
+    from repro.core.pipeline import detection_phase
+    from repro.data.synthetic import generate_labelled
+    audio, _ = generate_labelled(4, 4 * 12, segment_s=5.0)
+    S5 = audio.shape[-1]
+    chunks = jnp.asarray(audio.reshape(4, 12, 2, S5).transpose(0, 2, 1, 3)
+                         .reshape(4, 2, 12 * S5))
+    det_fft = jax.jit(lambda a: detection_phase(cfg, a))(chunks)
+    with backend.use("matmul"):
+        det_mm = jax.jit(lambda a: detection_phase(cfg, a))(chunks)
+    np.testing.assert_array_equal(np.asarray(det_fft.keep),
+                                  np.asarray(det_mm.keep))
+    np.testing.assert_array_equal(np.asarray(det_fft.rain),
+                                  np.asarray(det_mm.rain))
+    np.testing.assert_array_equal(np.asarray(det_fft.cicada15),
+                                  np.asarray(det_mm.cicada15))

@@ -1,0 +1,127 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward/train
+step asserting output shapes + no NaNs; prefill/decode consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.distributed.sharding import NULL_RULES as R
+from repro.models.zoo import build_model
+
+B, S = 2, 32
+
+
+def _batch(cfg, key=1):
+    tokens = jax.random.randint(jax.random.key(key), (B, S), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens, "targets": tokens}
+    if cfg.num_prefix_tokens:
+        batch["prefix"] = jax.random.normal(
+            jax.random.key(2), (B, cfg.num_prefix_tokens, cfg.d_model))
+    if cfg.is_enc_dec:
+        batch["enc_frames"] = jax.random.normal(
+            jax.random.key(3), (B, 16, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_train_step(arch):
+    cfg = reduced(ARCHS[arch])
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _batch(cfg)
+
+    (loss, metrics), grads = jax.jit(jax.value_and_grad(
+        lambda p: model.loss_fn(p, batch, R), has_aux=True))(params)
+    assert np.isfinite(float(loss))
+    assert 2.0 < float(loss) < 12.0            # ~ln(vocab) at init
+    gn = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+             for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_prefill_decode(arch):
+    cfg = reduced(ARCHS[arch])
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _batch(cfg)
+    logits, caches = jax.jit(lambda p, b: model.prefill(p, b, R))(
+        params, batch)
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    if cfg.family in ("dense", "moe", "vlm", "audio", "hybrid"):
+        kw = {"enc_len": 16} if cfg.is_enc_dec else {}
+        cache = model.init_cache(B, S, **kw)
+    else:
+        cache = model.init_cache(B)
+    tok = batch["tokens"][:, 0]
+    dlogits, cache2 = jax.jit(
+        lambda p, c, t: model.decode_step(p, c, t, 3, R))(params, cache, tok)
+    assert dlogits.shape == (B, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(dlogits)).all()
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "gemma-7b",
+                                  "granite-moe-3b-a800m", "zamba2-1.2b",
+                                  "xlstm-125m", "whisper-small",
+                                  "paligemma-3b"])
+def test_decode_matches_prefill(arch):
+    """serve_step correctness: decoding token t against the prefill cache of
+    tokens[:t] reproduces prefill(tokens[:t+1])'s next-token logits."""
+    cfg = dataclasses.replace(reduced(ARCHS[arch]), dtype="float32",
+                              moe_capacity_factor=16.0)   # dropless: decode
+    # has no capacity drops, so prefill must not drop either to compare
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    full = _batch(cfg)
+    k = S - 1
+    prefix_batch = dict(full)
+    prefix_batch["tokens"] = full["tokens"][:, :k]
+    logits_ref, _ = jax.jit(lambda p, b: model.prefill(p, b, R))(params, full)
+
+    _, pf_caches = jax.jit(lambda p, b: model.prefill(p, b, R))(
+        params, prefix_batch)
+    if cfg.family in ("dense", "moe", "vlm", "audio", "hybrid"):
+        kw = {"enc_len": 16} if cfg.is_enc_dec else {}
+        caches = model.init_cache(B, S + (cfg.num_prefix_tokens or 0), **kw)
+        for key in pf_caches:
+            if key in ("k", "v", "xk", "xv"):
+                pad = [(0, 0)] * pf_caches[key].ndim
+                pad[2] = (0, caches[key].shape[2] - pf_caches[key].shape[2])
+                caches[key] = jnp.pad(pf_caches[key], pad).astype(
+                    caches[key].dtype)
+            else:
+                caches[key] = pf_caches[key]
+    else:
+        caches = pf_caches
+    pos = (cfg.num_prefix_tokens or 0) + k
+    tok = full["tokens"][:, k]
+    logits_dec, _ = jax.jit(
+        lambda p, c, t: model.decode_step(p, c, t, pos, R))(
+            params, caches, tok)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_ref), rtol=5e-3, atol=5e-3)
+
+
+def test_moe_balance_metrics_exposed():
+    cfg = reduced(ARCHS["granite-moe-3b-a800m"])
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    loss, metrics = jax.jit(
+        lambda p, b: model.loss_fn(p, b, R))(params, _batch(cfg))
+    assert "lb_loss" in metrics and "dropped_frac" in metrics
+    assert float(metrics["dropped_frac"]) < 0.5
+
+
+def test_vocab_padding_masked_in_loss():
+    """Padded vocab rows must never receive probability mass."""
+    cfg = reduced(ARCHS["whisper-small"])          # vocab 512 stays unpadded
+    assert cfg.padded_vocab == cfg.vocab_size
+    full = ARCHS["granite-moe-3b-a800m"]
+    assert full.padded_vocab % 256 == 0
+    assert full.padded_vocab >= full.vocab_size

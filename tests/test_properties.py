@@ -1,0 +1,120 @@
+"""Hypothesis property-based tests on system invariants (per the brief)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core import indices as I
+from repro.core import scheduler as SCHED
+from repro.kernels.fir_hpf import ref as FR
+from repro.kernels.mmse_stsa import ref as MR
+from repro.train import compression as C
+
+_settings = settings(max_examples=25, deadline=None)
+
+power_arrays = hnp.arrays(
+    np.float32, hnp.array_shapes(min_dims=3, max_dims=3, min_side=2,
+                                 max_side=24),
+    elements=st.floats(2.0**-20, 2.0**13, width=32))
+
+
+@_settings
+@given(power_arrays)
+def test_indices_ranges(power):
+    p = jnp.asarray(power)
+    snr = np.asarray(I.snr_est(p))
+    flat = np.asarray(I.spectral_flatness(p))
+    assert ((snr >= 0) & (snr < 1 + 1e-6)).all()
+    assert ((flat > 0) & (flat <= 1 + 1e-5)).all()
+
+
+@_settings
+@given(power_arrays, st.floats(0.1, 100.0))
+def test_indices_scale_invariance(power, scale):
+    """snr/flatness are ratios — invariant to loudness scaling (what makes
+    the thresholds transferable across recording gains)."""
+    p = jnp.asarray(power)
+    # atol 1e-3 on a [0,1] index: float cancellation near snr=0 (constant
+    # envelopes) is three orders below the decision thresholds (0.45)
+    np.testing.assert_allclose(np.asarray(I.snr_est(p * scale)),
+                               np.asarray(I.snr_est(p)), rtol=2e-3,
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(I.spectral_flatness(p * scale)),
+                               np.asarray(I.spectral_flatness(p)),
+                               rtol=2e-3, atol=2e-4)
+
+
+@_settings
+@given(power_arrays, st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+def test_silence_threshold_monotonicity(power, t1, t2):
+    lo, hi = min(t1, t2), max(t1, t2)
+    p = jnp.asarray(power)
+    snr = I.snr_est(p)
+    assert (np.asarray(snr < lo) <= np.asarray(snr < hi)).all()
+
+
+@_settings
+@given(st.integers(0, 2**31 - 1), st.integers(1, 64))
+def test_compaction_preserves_survivors(seed, n):
+    rng = np.random.RandomState(seed)
+    keep = jnp.asarray(rng.rand(n) < 0.5)
+    chunks = jnp.asarray(rng.randn(n, 7).astype(np.float32))
+    packed, pkeep, count = SCHED.compact(chunks, keep)
+    count = int(count)
+    assert count == int(keep.sum())
+    assert bool(np.asarray(pkeep[:count]).all())
+    assert not np.asarray(pkeep[count:]).any()
+    want = set(map(tuple, np.asarray(chunks)[np.asarray(keep)]))
+    got = set(map(tuple, np.asarray(packed[:count])))
+    assert want == got
+
+
+@_settings
+@given(st.integers(0, 2**31 - 1), st.integers(33, 400), st.integers(1, 3))
+def test_fir_linearity(seed, S, stride):
+    rng = np.random.RandomState(seed)
+    h = FR.highpass_taps(1000.0, 22_050, 33)
+    x = jnp.asarray(rng.randn(1, S).astype(np.float32))
+    y = jnp.asarray(rng.randn(1, S).astype(np.float32))
+    a = float(rng.uniform(-2, 2))
+    left = FR.fir_ref(a * x + y, h, stride)
+    right = a * FR.fir_ref(x, h, stride) + FR.fir_ref(y, h, stride)
+    np.testing.assert_allclose(np.asarray(left), np.asarray(right),
+                               rtol=1e-3, atol=1e-4)
+
+
+@_settings
+@given(hnp.arrays(np.float32,
+                  hnp.array_shapes(min_dims=1, max_dims=3, min_side=1,
+                                   max_side=64),
+                  elements=st.floats(-(2.0**13), 2.0**13, width=32)))
+def test_rowwise_quant_error_bound(x):
+    codes, scale = C.quantize_rowwise_int8(jnp.asarray(x))
+    deq = np.asarray(C.dequantize_rowwise_int8(codes, scale))
+    bound = np.asarray(scale)[..., None] * 0.5 + 1e-6
+    assert (np.abs(deq - x) <= bound + 1e-4 * np.abs(x)).all()
+
+
+@_settings
+@given(st.integers(0, 2**31 - 1))
+def test_ef_quantization_residual_identity(seed):
+    """dequant(codes) + new_residual == grad + residual (error feedback
+    loses nothing)."""
+    rng = np.random.RandomState(seed)
+    g = jnp.asarray(rng.randn(40, 17).astype(np.float32) * 10)
+    r = jnp.asarray(rng.randn(40, 17).astype(np.float32))
+    codes, scale, new_r = C.quantize_ef(g, r)
+    deq = C.dequantize_block_int8(codes, scale, g.shape)
+    np.testing.assert_allclose(np.asarray(deq + new_r), np.asarray(g + r),
+                               rtol=1e-5, atol=1e-5)
+
+
+@_settings
+@given(st.integers(0, 2**31 - 1), st.integers(2, 100))
+def test_mmse_gain_bounded(seed, F):
+    rng = np.random.RandomState(seed)
+    power = jnp.asarray(rng.exponential(1.0, (1, F, 33)).astype(np.float32))
+    noise = MR.estimate_noise_psd(power, min(8, F))
+    g = np.asarray(MR.mmse_stsa_gain_ref(power, noise, gain_floor=0.05))
+    assert (g >= 0.05 - 1e-6).all() and (g <= 10.0 + 1e-6).all()
+    assert np.isfinite(g).all()
