@@ -1,21 +1,21 @@
 """The paper's HEADLINE economy, measured on-device: early exit (two-phase,
-MMSE on survivors only) vs no early exit (fused, masked MMSE on everything).
+MMSE on survivors only) vs no early exit (fused, masked MMSE on everything),
+plus the streaming plan's dispatch-ahead over a batch stream.
 
 The paper saves most of the dominant MMSE cost by deleting rain/silence
-chunks first; here the same pipeline runs both ways on the same audio and
-reports wall-clock + the survivor fraction (CPU wall time; the TPU-side
-equivalent is the flops/bytes delta in EXPERIMENTS.md §Perf cell 3).
+chunks first; here the same stage graph runs under all three execution plans
+on the same audio and reports wall-clock + the survivor fraction (CPU wall
+time; the TPU-side equivalent is the flops/bytes delta in EXPERIMENTS.md
+§Perf cell 3).
 """
 from __future__ import annotations
 
 import time
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import SERF_AUDIO as cfg
-from repro.core.pipeline import preprocess_fused, preprocess_two_phase
+from repro.core.plans import Preprocessor
 from repro.data.synthetic import generate_labelled
 from benchmarks.util import table, save_json
 
@@ -29,25 +29,36 @@ def run(minutes=4.0, seed=1, rainy=True):
     chunks = jnp.asarray(audio.reshape(n_long, 12, 2, S5)
                          .transpose(0, 2, 1, 3).reshape(n_long, 2, 12 * S5))
 
-    fused = jax.jit(lambda a: preprocess_fused(cfg, a))
-    out = jax.block_until_ready(fused(chunks))          # compile + warm
+    fused = Preprocessor(cfg, plan="fused")
+    _ = fused(chunks)                                   # compile + warm
     t0 = time.perf_counter()
-    out = jax.block_until_ready(fused(chunks))
+    _ = fused(chunks)
     t_fused = time.perf_counter() - t0
 
-    _ = preprocess_two_phase(cfg, chunks, pad_multiple=1)   # warm both jits
+    two = Preprocessor(cfg, plan="two_phase")
+    _ = two(chunks)                                     # warm both phases
     t0 = time.perf_counter()
-    cleaned, det, n_kept = preprocess_two_phase(cfg, chunks, pad_multiple=1)
+    res = two(chunks)
     t_two = time.perf_counter() - t0
 
-    frac = n_kept / int(det.stats["n_chunks5"])
+    # streaming: per-batch wall time with detection dispatch-ahead over a
+    # 2-batch stream of the same work (shared compile cache, already warm)
+    streaming = Preprocessor(cfg, plan="streaming")
+    stream = [chunks, chunks]
+    _ = list(streaming.run(stream))
+    t0 = time.perf_counter()
+    _ = list(streaming.run(stream))
+    t_stream = (time.perf_counter() - t0) / len(stream)
+
+    frac = res.n_kept / int(res.det.stats["n_chunks5"])
     rows = [["fused (no early exit)", t_fused, 1.0],
-            ["two-phase (paper)", t_two, t_fused / t_two]]
-    table(rows, ["mode", "wall s", "speedup"],
+            ["two-phase (paper)", t_two, t_fused / t_two],
+            ["streaming (dispatch-ahead)", t_stream, t_fused / t_stream]]
+    table(rows, ["plan", "wall s/batch", "speedup"],
           title=f"Early-exit economy: {minutes:.0f} min of audio, "
                 f"survivors {frac:.0%}")
     save_json("early_exit", {
-        "t_fused": t_fused, "t_two_phase": t_two,
+        "t_fused": t_fused, "t_two_phase": t_two, "t_streaming": t_stream,
         "survivor_frac": frac,
         "finding_early_exit_saves": bool(t_two < t_fused),
     })

@@ -45,7 +45,7 @@ def run(hours=2.0, trials=4):
             np.abs(ratio - want).max() < 0.08)}
 
     # on-device: survivor balance before/after compaction
-    from repro.core.pipeline import detection_phase
+    from repro.core.plans import Preprocessor
     from repro.core.scheduler import balance_stats
     from repro.configs import SERF_AUDIO as cfg
     from repro.data.synthetic import generate_labelled
@@ -53,7 +53,7 @@ def run(hours=2.0, trials=4):
     S5 = audio.shape[-1]
     chunks = (audio.reshape(8, 12, 2, S5).transpose(0, 2, 1, 3)
               .reshape(8, 2, 12 * S5))
-    det = jax.jit(lambda a: detection_phase(cfg, a))(jnp.asarray(chunks))
+    det = Preprocessor(cfg).detect(jnp.asarray(chunks))
     bs = jax.jit(lambda k: balance_stats(k, 8))(det.keep)
     print(f"\non-device survivor imbalance over 8 shards: "
           f"{float(bs['imbalance']):.3f} -> "

@@ -1,6 +1,7 @@
 """Benchmark aggregator: one bench per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--full]
+  PYTHONPATH=src python -m benchmarks.run --smoke   # executor regression gate
 
 Order matters: stage-time calibration feeds the DES benches; comm feeds the
 DES transfer model. The roofline table prints from the dry-run records.
@@ -12,11 +13,57 @@ import time
 import traceback
 
 
+def smoke():
+    """One tiny batch stream through EVERY registered execution plan:
+    survivor sets must match bit-for-bit and cleaned audio to rtol=1e-4, so
+    executor regressions fail fast (scripts/verify.sh runs this)."""
+    import numpy as np
+    from repro.configs import SERF_AUDIO as cfg
+    from repro.core.plans import PLANS, Preprocessor
+    from repro.data.synthetic import generate_labelled
+
+    audio, _ = generate_labelled(0, 2 * 12, segment_s=5.0)
+    S5 = audio.shape[-1]
+    chunks = (audio.reshape(2, 12, 2, S5).transpose(0, 2, 1, 3)
+              .reshape(2, 2, 12 * S5))
+    stream = [(0, (chunks[:1], None)), (1, (chunks[1:], None))]
+    ref_name = ref = None
+    failures = []
+    for name in sorted(PLANS):
+        t0 = time.time()
+        try:
+            pre = Preprocessor(cfg, plan=name, pad_multiple=1)
+            results = list(pre.run(stream))
+            keep = np.concatenate([np.asarray(r.det.keep) for r in results])
+            cleaned = np.concatenate([r.cleaned for r in results])
+            assert np.isfinite(cleaned).all(), "non-finite output"
+            assert cleaned.shape[0] == int(keep.sum())
+            if ref is None:
+                ref_name, ref = name, (keep, cleaned)
+            else:
+                np.testing.assert_array_equal(keep, ref[0])
+                np.testing.assert_allclose(cleaned, ref[1],
+                                           rtol=1e-4, atol=1e-5)
+            print(f"plan {name:10s} OK: {cleaned.shape[0]}/{keep.size} "
+                  f"survivors in {time.time() - t0:.1f}s"
+                  + ("" if ref[1] is cleaned else f" (== {ref_name})"))
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    print(f"\nsmoke: {len(PLANS) - len(failures)}/{len(PLANS)} plans OK"
+          + (f"; FAILED: {failures}" if failures else ""))
+    raise SystemExit(1 if failures else 0)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on 1 CPU core)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny batch through every execution plan, then exit")
     args = ap.parse_args()
+    if args.smoke:
+        smoke()
     minutes = 16.0 if args.full else 2.0
     hours = 2.0
 

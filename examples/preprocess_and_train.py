@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import SERF_AUDIO, ARCHS, reduced
-from repro.core.pipeline import preprocess_two_phase
+from repro.core.plans import Preprocessor
 from repro.core import stages as S
 from repro.data.synthetic import generate_labelled
 from repro.distributed.sharding import NULL_RULES
@@ -54,6 +54,7 @@ def main():
     step_fn = jax.jit(make_train_step(model, NULL_RULES, opt),
                       donate_argnums=(0, 1))
 
+    pre = Preprocessor(SERF_AUDIO, plan="two_phase")
     rng = np.random.RandomState(0)
     t0, losses = time.time(), []
     for step in range(1, args.steps + 1):
@@ -62,14 +63,13 @@ def main():
         S5 = audio.shape[-1]
         lc = audio.reshape(1, 12, 2, S5).transpose(0, 2, 1, 3).reshape(
             1, 2, 12 * S5)
-        cleaned, det, n_kept = preprocess_two_phase(SERF_AUDIO,
-                                                    jnp.asarray(lc))
-        if n_kept == 0:
+        res = pre(jnp.asarray(lc))
+        if res.n_kept == 0:
             continue
-        kept_labels = labels[np.asarray(det.keep)]
+        kept_labels = labels[np.asarray(res.det.keep)]
         # 2) featurize survivors; batch up
-        idx = rng.choice(n_kept, size=args.batch)
-        frames = featurize(SERF_AUDIO, model_cfg, cleaned[idx])
+        idx = rng.choice(res.n_kept, size=args.batch)
+        frames = featurize(SERF_AUDIO, model_cfg, res.cleaned[idx])
         # pseudo-transcripts keyed to the acoustic label
         base = (kept_labels[idx][:, None] * 31 + 5).astype(np.int32)
         toks = (base + np.arange(args.dec_len)[None, :] * 7) % \
@@ -81,7 +81,7 @@ def main():
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         losses.append(float(metrics["loss"]))
         if step % 10 == 0:
-            print(f"step {step:4d} kept {n_kept:2d}/12 chunks  "
+            print(f"step {step:4d} kept {res.n_kept:2d}/12 chunks  "
                   f"loss {losses[-1]:.3f}  "
                   f"({step / (time.time() - t0):.2f} steps/s)", flush=True)
     print(f"\nloss: {losses[0]:.3f} -> {losses[-1]:.3f} "

@@ -1,5 +1,6 @@
 """Quickstart: preprocess synthetic bird-acoustic audio through the paper's
-unified early-exit pipeline and print what each stage did.
+unified early-exit pipeline — now a config-declared stage graph run by an
+execution plan — and print what each stage did.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import SERF_AUDIO as cfg
-from repro.core.pipeline import preprocess_two_phase
+from repro.core.plans import Preprocessor
 from repro.data.synthetic import generate_labelled, LABELS
 
 
@@ -24,21 +25,23 @@ def main():
     print("ground truth:",
           {l: int((labels == i).sum()) for i, l in enumerate(LABELS)})
 
-    cleaned, det, n_kept = preprocess_two_phase(
-        cfg, jnp.asarray(long_chunks), pad_multiple=len(jax.devices()))
+    # The stage order is DATA on the config; the plan decides execution
+    # (fused / two_phase / streaming — see repro.core.plans.PLANS).
+    pre = Preprocessor(cfg, plan="two_phase",
+                       pad_multiple=len(jax.devices()))
+    res = pre(jnp.asarray(long_chunks))
 
-    s = {k: float(v) for k, v in det.stats.items()}
-    print(f"\npipeline: split(60s) -> mono -> fused downsample+HPF -> "
-          f"split(15s) -> STFT once ->")
-    print(f"  rain detect      removed {s['frac_rain']:.1%}")
-    print(f"  cicada detect    band-stopped {s['frac_cicada15']:.1%} "
+    s = {k: float(v) for k, v in res.det.stats.items()}
+    print(f"\nstage graph: {' -> '.join(cfg.stages)}")
+    print(f"  detect_rain      removed {s['frac_rain']:.1%}")
+    print(f"  cicada_bandstop  band-stopped {s['frac_cicada15']:.1%} "
           f"of 15 s chunks")
-    print(f"  split(5s) + silence detect removed {s['frac_silence']:.1%}")
-    print(f"  MMSE-STSA        ran on the {n_kept} survivors only "
+    print(f"  detect_silence   removed {s['frac_silence']:.1%}")
+    print(f"  mmse             ran on the {res.n_kept} survivors only "
           f"({s['frac_kept']:.1%}) — the paper's early-exit economy")
-    print(f"\noutput: {cleaned.shape[0]} cleaned 5 s chunks @ "
+    print(f"\noutput: {res.cleaned.shape[0]} cleaned 5 s chunks @ "
           f"{cfg.target_rate_hz / 1000:.2f} kHz, "
-          f"finite={np.isfinite(cleaned).all()}")
+          f"finite={np.isfinite(res.cleaned).all()}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate (see ROADMAP.md "Tier-1 verify"):
+#   1. the repo's own test suite
+#   2. the executor smoke: one tiny batch through every registered
+#      execution plan (survivor sets must agree bit-for-bit)
+#
+#   bash scripts/verify.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+python -m pytest -x -q "$@"
+python -m benchmarks.run --smoke

@@ -56,6 +56,24 @@ class AudioPipelineConfig:
     # distribution parameters (paper Table 7)
     slave_queue_size: int = 5
     send_interval_s: float = 2.0
+    # the pipeline stage order AS DATA (names from repro.core.graph.STAGES).
+    # This default is the paper's profiled order; ablations (reorder, drop a
+    # detector, move the removal point) are dataclasses.replace edits, not
+    # driver forks. "removal_point" marks where host compaction may occur
+    # (the early-exit boundary two-phase/streaming plans cut at).
+    stages: tuple = (
+        "to_mono",
+        "compress",
+        "split_detect",
+        "stft",
+        "detect_rain",
+        "cicada_bandstop",
+        "istft",
+        "split_final",
+        "detect_silence",
+        "removal_point",
+        "mmse",
+    )
 
     @property
     def long_split_samples(self) -> int:

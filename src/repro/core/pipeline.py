@@ -1,135 +1,78 @@
-"""The unified preprocessing pipeline (the paper's core contribution).
+"""DEPRECATED entry points for the unified preprocessing pipeline.
 
-Stage order (derived in the paper from per-stage cost + accuracy coupling):
+The pipeline is now a composable stage graph (the paper's one profiled
+order, expressed as config data):
 
-  split(60 s) -> mono -> [fused downsample+HPF] -> split(15 s) -> STFT(once)
-  -> rain detect (removes) -> cicada detect+bandstop -> split(5 s)
-  -> silence detect (removes) -> MMSE-STSA (dominant cost, survivors only)
+  * `repro.core.graph`  — `Stage` protocol + `STAGES` registry +
+    `PipelineGraph` (build-time shape validation, `removal_point` markers).
+  * `repro.core.plans`  — `FusedPlan` / `TwoPhasePlan` / `StreamingPlan`
+    behind the `Preprocessor` facade, with a keyed LRU compile cache.
 
-Two execution modes:
-  * fused      — one jit; removed chunks are masked but still computed
-                 (the "no early exit" baseline).
-  * two_phase  — detection jit, host reads the keep mask (the paper's master
-                 bookkeeping), survivors are compacted/re-batched, MMSE jit
-                 runs on the survivor batch only. This realises the paper's
-                 headline saving: MMSE cost scales with surviving audio.
+The paper's stage order lives on `AudioPipelineConfig.stages`:
 
-Distribution: chunk batch dim is sharded over every mesh axis (pure data
-parallelism — the paper's file parallelisation). No collectives are needed
-inside the pipeline except the compaction argsort.
+  to_mono -> compress (fused downsample+HPF) -> split_detect(15 s) ->
+  stft (once) -> detect_rain -> cicada_bandstop -> istft ->
+  split_final(5 s) -> detect_silence -> removal_point -> mmse
+
+New code should use:
+
+    from repro.core.plans import Preprocessor
+    pre = Preprocessor(cfg, rules, plan="two_phase")
+    res = pre(audio_src)                  # one batch
+    for res in pre.run(loader): ...       # a stream
+
+This module keeps thin shims for the seed API (`detection_phase`,
+`mmse_phase`, `preprocess_fused`, `preprocess_two_phase`); they delegate to
+the graph built from `cfg.stages` and will be removed once nothing imports
+them.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import functools
+import warnings
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import stages as S
-from repro.core import detect as D
-from repro.core import scheduler as SCHED
+from repro.core.graph import PipelineGraph, PipelineOutput  # noqa: F401
+from repro.core.plans import TwoPhasePlan
 from repro.distributed.sharding import NULL_RULES
 
 
-@jax.tree_util.register_dataclass
-@dataclass
-class PipelineOutput:
-    wave5: jnp.ndarray          # (N5, S5) processed 5 s chunks
-    keep: jnp.ndarray           # (N5,) bool — survives to output
-    rain: jnp.ndarray           # (N5,) bool
-    silence: jnp.ndarray        # (N5,) bool
-    cicada15: jnp.ndarray       # (N15,) bool — per detect chunk
-    stats: dict
+@functools.lru_cache(maxsize=16)
+def _default_graph(cfg) -> PipelineGraph:
+    return PipelineGraph(cfg)
+
+
+def _deprecated(name):
+    warnings.warn(
+        f"repro.core.pipeline.{name} is deprecated; use "
+        f"repro.core.plans.Preprocessor", DeprecationWarning, stacklevel=3)
 
 
 def detection_phase(cfg, audio_src, rules=NULL_RULES):
-    """audio_src: (B, C, S_long_src) @44.1 kHz stereo long chunks.
-
-    Returns PipelineOutput with wave5 NOT yet MMSE-filtered."""
-    B = audio_src.shape[0]
-    n15 = int(cfg.long_split_s / cfg.detect_split_s)
-    n5 = int(cfg.detect_split_s / cfg.final_split_s)
-
-    x = S.to_mono(audio_src)                        # (B, S60src)
-    x = rules.constrain(x, "chunks", None)
-    x = S.compress(x, cfg)                          # (B, S60) @22.05k
-    c15 = S.split(x, n15)                           # (B*4, S15)
-    c15 = rules.constrain(c15, "chunks", None)
-
-    spec, power = S.stft_chunks(c15, cfg)           # STFT once per chunk
-    cls = D.classify_chunks(power, cfg)
-    rain15 = cls["rain"]
-    cicada15 = cls["cicada"]
-
-    spec = S.remove_cicada_band(spec, cls["indices"]["cicada_peak_bin"],
-                                cicada15, cfg)
-    wave15 = S.istft_chunks(spec, c15.shape[1], cfg)
-
-    wave5 = S.split(wave15, n5)                     # (B*12, S5)
-    power5 = S.group_frames(power, n5, c15.shape[1], cfg)
-    from repro.core import indices as I
-    silence5 = I.snr_est(power5) < cfg.silence_snr_threshold
-    rain5 = jnp.repeat(rain15, n5)
-    silence5 = silence5 & ~rain5
-    keep = ~rain5 & ~silence5
-
-    stats = {
-        "n_chunks5": wave5.shape[0],
-        "frac_rain": jnp.mean(rain5.astype(jnp.float32)),
-        "frac_silence": jnp.mean(silence5.astype(jnp.float32)),
-        "frac_kept": jnp.mean(keep.astype(jnp.float32)),
-        "frac_cicada15": jnp.mean(cicada15.astype(jnp.float32)),
-    }
-    return PipelineOutput(wave5=wave5, keep=keep, rain=rain5,
-                          silence=silence5, cicada15=cicada15, stats=stats)
+    """Deprecated: `Preprocessor(cfg, rules).detect(audio_src)`."""
+    _deprecated("detection_phase")
+    return _default_graph(cfg).detection(audio_src, rules)
 
 
 def mmse_phase(cfg, wave5, rules=NULL_RULES):
-    """The dominant stage, applied to (surviving) 5 s chunks."""
-    wave5 = rules.constrain(wave5, "chunks", None)
-    return S.mmse_denoise(wave5, cfg)
+    """Deprecated: the graph tail past the removal point."""
+    _deprecated("mmse_phase")
+    return _default_graph(cfg).tail(wave5, rules)
 
 
 def preprocess_fused(cfg, audio_src, rules=NULL_RULES):
-    """Single-jit mode: masked MMSE (no early exit — baseline)."""
-    out = detection_phase(cfg, audio_src, rules)
-    cleaned = mmse_phase(cfg, out.wave5, rules)
-    wave = jnp.where(out.keep[:, None], cleaned, 0.0)
-    return PipelineOutput(wave5=wave, keep=out.keep, rain=out.rain,
-                          silence=out.silence, cicada15=out.cicada15,
-                          stats=out.stats)
-
-
-_JIT_CACHE = {}
-
-
-def _cached_jit(kind, cfg, rules, fn):
-    key = (kind, cfg, id(rules))
-    if key not in _JIT_CACHE:
-        _JIT_CACHE[key] = jax.jit(fn)
-    return _JIT_CACHE[key]
+    """Deprecated: `Preprocessor(cfg, rules, plan="fused")(audio_src)`."""
+    _deprecated("preprocess_fused")
+    return _default_graph(cfg).fused(audio_src, rules)
 
 
 def preprocess_two_phase(cfg, audio_src, rules=NULL_RULES, pad_multiple=1):
-    """Paper-faithful early exit: detection jit -> host compaction ->
-    MMSE jit on the survivor batch only.
+    """Deprecated: `Preprocessor(cfg, rules, plan="two_phase")`.
 
-    The two phase functions are cached per (cfg, rules) — the master loop
-    calls this per batch and must not retrace (phase B retraces only when
-    the padded survivor count changes, which pad_multiple quantizes).
-
-    Returns (cleaned survivors (N_kept_padded, S5), PipelineOutput,
-    n_survivors)."""
-    det_fn = _cached_jit("detect", cfg, rules,
-                         lambda a: detection_phase(cfg, a, rules))
-    det = det_fn(audio_src)
-    wave5 = np.asarray(det.wave5)
-    keep = np.asarray(det.keep)
-    batch, n_real = SCHED.survivor_batch(wave5, keep, pad_multiple)
-    if batch is None:
-        return np.zeros((0, wave5.shape[1]), np.float32), det, 0
-    mmse_fn = _cached_jit("mmse", cfg, rules,
-                          lambda w: mmse_phase(cfg, w, rules))
-    cleaned = mmse_fn(jnp.asarray(batch))
-    return np.asarray(cleaned)[:n_real], det, n_real
+    Returns (cleaned survivors (n_kept, S5) np, PipelineOutput, n_kept) —
+    the seed signature."""
+    _deprecated("preprocess_two_phase")
+    plan = TwoPhasePlan(_default_graph(cfg), rules, pad_multiple)
+    res = plan(audio_src)
+    return np.asarray(res.cleaned), res.det, res.n_kept

@@ -1,0 +1,246 @@
+"""Execution plans: HOW a validated `PipelineGraph` runs on a batch stream.
+
+The graph fixes WHAT computes (stage order, removal points); a plan picks
+the execution strategy:
+
+  * `FusedPlan`     — one jit straight through; removed chunks are masked
+                      but still computed (the paper's no-early-exit
+                      baseline).
+  * `TwoPhasePlan`  — detection jit -> host reads the keep mask (the
+                      paper's master bookkeeping) -> survivors compacted /
+                      re-batched -> tail jit on the survivor batch only.
+                      The paper's headline economy: MMSE cost scales with
+                      surviving audio.
+  * `StreamingPlan` — two-phase with dispatch-ahead over a loader: phase-A
+                      detection of batch k+1 is enqueued on the device
+                      before phase B of batch k, so host-side mask readback
+                      + compaction overlap device work.
+
+All plans sit behind the `Preprocessor` facade, and all jitted phases live
+in one keyed LRU `CompileCache`. Keys are *value* fingerprints — config,
+stage list, `ShardingRules.fingerprint` (mesh shape + rule table), kernel
+backend mode — never object ids, so logically-equal rules objects share
+compiles and the cache cannot alias after GC reuses an id (the old
+`_JIT_CACHE`/`id(rules)` bug).
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scheduler as SCHED
+from repro.core.graph import (GraphValidationError, PipelineGraph,
+                              PipelineOutput)
+from repro.distributed.sharding import NULL_RULES
+from repro.kernels import backend
+
+
+class CompileCache:
+    """Small keyed LRU for jitted phase functions (capped — the old global
+    grew without bound)."""
+
+    def __init__(self, maxsize=64):
+        self.maxsize = maxsize
+        self._d = collections.OrderedDict()
+
+    def get(self, key, build):
+        if key in self._d:
+            self._d.move_to_end(key)
+            return self._d[key]
+        val = build()
+        self._d[key] = val
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+        return val
+
+    def __len__(self):
+        return len(self._d)
+
+    def __contains__(self, key):
+        return key in self._d
+
+    def clear(self):
+        self._d.clear()
+
+
+JIT_CACHE = CompileCache(maxsize=64)
+
+
+def _cache_key(kind, graph: PipelineGraph, rules):
+    return (kind, graph.fingerprint, rules.fingerprint, backend.get_mode())
+
+
+def _phase_fn(kind, graph: PipelineGraph, rules):
+    """Plain (un-jitted) callable for one phase — what dry-run lowering and
+    the jit cache both consume."""
+    if kind == "fused":
+        return lambda a: graph.fused(a, rules)
+    if kind == "detect":
+        return lambda a: graph.detection(a, rules)
+    if kind in ("tail", "mmse"):
+        return lambda w: graph.tail(w, rules)
+    raise KeyError(f"unknown phase {kind!r}")
+
+
+def _jitted(kind, graph, rules):
+    return JIT_CACHE.get(_cache_key(kind, graph, rules),
+                         lambda: jax.jit(_phase_fn(kind, graph, rules)))
+
+
+@dataclass
+class BatchResult:
+    """One batch through a plan: compacted survivors + the detection record."""
+    cleaned: np.ndarray             # (n_kept, S_final) denoised survivors
+    det: PipelineOutput             # detection-phase record (masks, stats)
+    n_kept: int
+    wid: object = None              # loader work id (when run over a loader)
+    labels: object = field(default=None, repr=False)   # loader passthrough
+    src_bytes: int = 0              # measured input bytes (throughput acct)
+
+
+def _iter_batches(batches):
+    """Normalise a batch stream: accepts arrays, (chunks, labels) pairs, or
+    the (wid, (chunks, labels)) items AudioChunkLoader yields."""
+    for i, item in enumerate(batches):
+        wid, payload, extra = i, item, None
+        if isinstance(item, tuple) and len(item) == 2 \
+                and np.ndim(item[0]) == 0:
+            wid, payload = item
+        if isinstance(payload, tuple):
+            chunks = payload[0]
+            extra = payload[1] if len(payload) > 1 else None
+        else:
+            chunks = payload
+        yield wid, chunks, extra
+
+
+class ExecutionPlan:
+    """Base: one batch via `__call__`, a stream via `run` (plans override
+    `run` to pipeline across batches)."""
+    name = ""
+
+    def __init__(self, graph: PipelineGraph, rules=NULL_RULES,
+                 pad_multiple=1):
+        self.graph = graph
+        self.rules = rules
+        self.pad_multiple = max(1, int(pad_multiple))
+
+    def __call__(self, audio) -> BatchResult:
+        raise NotImplementedError
+
+    def run(self, batches):
+        for wid, chunks, extra in _iter_batches(batches):
+            res = self(jnp.asarray(chunks))
+            yield replace(res, wid=wid, labels=extra)
+
+
+class FusedPlan(ExecutionPlan):
+    name = "fused"
+
+    def __call__(self, audio) -> BatchResult:
+        x = jnp.asarray(audio)
+        out = _jitted("fused", self.graph, self.rules)(x)
+        keep = np.asarray(out.keep)
+        cleaned = np.asarray(out.wave5)[keep]
+        return BatchResult(cleaned=cleaned, det=out, n_kept=int(keep.sum()),
+                           src_bytes=int(x.nbytes))
+
+
+class TwoPhasePlan(ExecutionPlan):
+    name = "two_phase"
+
+    def __init__(self, graph, rules=NULL_RULES, pad_multiple=1):
+        super().__init__(graph, rules, pad_multiple)
+        if not graph.has_removal_point:
+            raise GraphValidationError(
+                f"plan '{self.name}' needs a 'removal_point' stage in the "
+                f"graph (stages: {graph.names}); use the fused plan for "
+                f"graphs without early exit")
+
+    def detect(self, audio) -> PipelineOutput:
+        return _jitted("detect", self.graph, self.rules)(jnp.asarray(audio))
+
+    def _finish(self, det: PipelineOutput, wid=None, extra=None,
+                src_bytes=0):
+        """Host-side master bookkeeping: read the mask, compact survivors
+        to a padded batch (pad_multiple quantizes phase-B shapes so the
+        tail jit rarely retraces), run the tail."""
+        wave = np.asarray(det.wave5)
+        keep = np.asarray(det.keep)
+        batch, n_real = SCHED.survivor_batch(wave, keep, self.pad_multiple)
+        if batch is None:
+            cleaned = np.zeros((0, wave.shape[1]), np.float32)
+        else:
+            tail = _jitted("tail", self.graph, self.rules)
+            cleaned = np.asarray(tail(jnp.asarray(batch)))[:n_real]
+        return BatchResult(cleaned=cleaned, det=det, n_kept=n_real,
+                           wid=wid, labels=extra, src_bytes=src_bytes)
+
+    def __call__(self, audio) -> BatchResult:
+        x = jnp.asarray(audio)
+        return self._finish(self.detect(x), src_bytes=int(x.nbytes))
+
+
+class StreamingPlan(TwoPhasePlan):
+    """Two-phase with one batch of dispatch-ahead: detection of batch k+1
+    is already in the device queue while the host does batch k's mask
+    readback, compaction, and tail dispatch."""
+    name = "streaming"
+
+    def run(self, batches):
+        pending = None
+        for wid, chunks, extra in _iter_batches(batches):
+            x = jnp.asarray(chunks)
+            det = self.detect(x)                      # async dispatch
+            if pending is not None:
+                yield self._finish(*pending)
+            pending = (det, wid, extra, int(x.nbytes))
+        if pending is not None:
+            yield self._finish(*pending)
+
+
+PLANS = {p.name: p for p in (FusedPlan, TwoPhasePlan, StreamingPlan)}
+
+
+class Preprocessor:
+    """The single facade every entry point uses.
+
+        pre = Preprocessor(SERF_AUDIO, rules, plan="streaming",
+                           pad_multiple=len(jax.devices()))
+        for res in pre.run(loader):        # loader: AudioChunkLoader items
+            use(res.cleaned, res.det.stats, res.n_kept)
+
+    `plan` is a name from `PLANS` or an ExecutionPlan subclass; `stages`
+    overrides the config-declared stage list for ablations.
+    """
+
+    def __init__(self, cfg, rules=NULL_RULES, plan="two_phase",
+                 pad_multiple=1, stages=None, source_channels=2):
+        self.cfg = cfg
+        self.rules = rules
+        self.graph = PipelineGraph(cfg, stages, source_channels)
+        plan_cls = PLANS[plan] if isinstance(plan, str) else plan
+        self.plan = plan_cls(self.graph, rules, pad_multiple)
+
+    def __call__(self, audio) -> BatchResult:
+        """One batch of (B, C, S_long_src) long chunks -> BatchResult."""
+        return self.plan(audio)
+
+    def run(self, batches):
+        """Iterate BatchResults over a batch stream / AudioChunkLoader."""
+        return self.plan.run(batches)
+
+    def detect(self, audio) -> PipelineOutput:
+        """The phase-A stages only (shared compile cache; plan-independent).
+        For a graph without a removal point this is the whole chain — see
+        PipelineGraph.detection."""
+        return _jitted("detect", self.graph, self.rules)(jnp.asarray(audio))
+
+    def phase_fn(self, kind):
+        """Un-jitted phase callable ('fused' | 'detect' | 'mmse'/'tail')
+        for jax.jit(...).lower-style analysis (see launch/dryrun.py)."""
+        return _phase_fn(kind, self.graph, self.rules)

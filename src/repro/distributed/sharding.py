@@ -118,6 +118,21 @@ class ShardingRules:
             return x
         return jax.lax.with_sharding_constraint(x, self.sharding(*axes))
 
+    @property
+    def fingerprint(self):
+        """Stable hashable identity for compile-cache keying: mesh axis
+        names + shape + DEVICE IDS + the resolved rule table. Logically-
+        equal rules compare equal, unlike `id(rules)` which can silently
+        collide after GC reuses the id; device ids keep two same-shape
+        meshes over different devices (elastic restart) from aliasing a
+        jitted closure that captured the old mesh."""
+        mesh = (() if self.mesh is None
+                else (tuple(self.mesh.axis_names),
+                      tuple(self.mesh.devices.shape),
+                      tuple(int(d.id) for d in self.mesh.devices.flat)))
+        table = tuple(sorted((k, tuple(v)) for k, v in self._table.items()))
+        return (self.mode, mesh, table)
+
 
 NULL_RULES = ShardingRules(mesh=None)
 

@@ -149,11 +149,11 @@ def lower_audio_cell(mesh, mesh_name, variant="fused", n_chunks=512):
                   measured mean survivor fraction)
     """
     from repro.configs import SERF_AUDIO
-    from repro.core.pipeline import detection_phase, preprocess_fused, \
-        mmse_phase
+    from repro.core.plans import Preprocessor
     from repro.kernels import backend
     cfg = SERF_AUDIO
     rules = ShardingRules(mesh)
+    pre = Preprocessor(cfg, rules)
     t0 = time.time()
     S60 = int(12 * 5.0 * cfg.source_rate_hz)
     # matmul-DFT path: the TPU-target computation shape (MXU DFT), and the
@@ -161,8 +161,7 @@ def lower_audio_cell(mesh, mesh_name, variant="fused", n_chunks=512):
     with backend.use("matmul"):
         if variant in ("fused", "detect"):
             x = jax.ShapeDtypeStruct((n_chunks, 2, S60), jnp.float32)
-            fn = (lambda a: preprocess_fused(cfg, a, rules)) if variant == \
-                "fused" else (lambda a: detection_phase(cfg, a, rules))
+            fn = pre.phase_fn("fused" if variant == "fused" else "detect")
             sh = rules.sharding("chunks", None, None)
             lowered = jax.jit(fn, in_shardings=(sh,)).lower(x)
         else:
@@ -170,7 +169,7 @@ def lower_audio_cell(mesh, mesh_name, variant="fused", n_chunks=512):
             n5 -= n5 % mesh.devices.size
             w = jax.ShapeDtypeStruct((n5, cfg.final_split_samples),
                                      jnp.float32)
-            lowered = jax.jit(lambda a: mmse_phase(cfg, a, rules),
+            lowered = jax.jit(pre.phase_fn("mmse"),
                               in_shardings=(rules.sharding("chunks", None),)
                               ).lower(w)
         t_lower = time.time() - t0

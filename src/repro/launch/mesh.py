@@ -6,14 +6,24 @@ dry-run sees its 512 placeholder devices)."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                                    # jax >= 0.4.35
+    from jax.sharding import AxisType
+except ImportError:                     # older jax: make_mesh has no
+    AxisType = None                     # axis_types parameter
+
+
+def _make_mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_local_mesh(model_parallel=1):
@@ -22,11 +32,9 @@ def make_local_mesh(model_parallel=1):
     mp = model_parallel
     while n % mp:
         mp //= 2
-    return jax.make_mesh((n // mp, mp), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return _make_mesh((n // mp, mp), ("data", "model"))
 
 
 def mesh_from_plan(plan):
     """Build a mesh from an ft.failure.MeshPlan (elastic restart path)."""
-    return jax.make_mesh(plan.shape, plan.axes,
-                         axis_types=(AxisType.Auto,) * len(plan.axes))
+    return _make_mesh(plan.shape, plan.axes)

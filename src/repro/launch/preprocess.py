@@ -1,11 +1,12 @@
 """The paper's end-to-end driver: preprocess a stream of bird-acoustic long
-chunks through the unified early-exit pipeline.
+chunks through the stage-graph pipeline under a chosen execution plan.
 
-  PYTHONPATH=src python -m repro.launch.preprocess --minutes 8 --mode two_phase
+  PYTHONPATH=src python -m repro.launch.preprocess --minutes 8 --plan streaming
 
 Reports per-stage removal fractions and throughput (the paper's headline
 metric: MB/s of source audio preprocessed; their 4-VM x 4-core figure was
-16.4-16.5 MB/s).
+16.4-16.5 MB/s). Per-batch stats are aggregated weighted by chunk count, so
+uneven batches don't skew the fractions.
 """
 from __future__ import annotations
 
@@ -13,24 +14,23 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import SERF_AUDIO
-from repro.core.pipeline import (detection_phase, preprocess_two_phase,
-                                 preprocess_fused)
+from repro.core.plans import PLANS, Preprocessor
 from repro.core.scheduler import balance_stats
 from repro.data.loader import AudioChunkLoader
 from repro.distributed.sharding import ShardingRules
 from repro.launch.mesh import make_local_mesh
+
+_FRAC_KEYS = ("frac_rain", "frac_silence", "frac_kept", "frac_cicada15")
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--minutes", type=float, default=4.0)
     ap.add_argument("--batch-long-chunks", type=int, default=4)
-    ap.add_argument("--mode", default="two_phase",
-                    choices=["two_phase", "fused"])
+    ap.add_argument("--plan", "--mode", dest="plan", default="two_phase",
+                    choices=sorted(PLANS))
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -40,35 +40,33 @@ def main(argv=None):
                               batch_long_chunks=args.batch_long_chunks)
     mesh = make_local_mesh()
     rules = ShardingRules(mesh)
+    pre = Preprocessor(cfg, rules, plan=args.plan,
+                       pad_multiple=max(1, len(jax.devices())))
 
-    tot_bytes = 0
-    tot_kept = tot_chunks = 0
+    tot_bytes = tot_kept = tot_chunks = 0
+    agg = {k: 0.0 for k in _FRAC_KEYS}
+    last_keep = None
     t0 = time.time()
-    agg = None
-    for wid, (chunks, labels) in loader:
-        tot_bytes += chunks.nbytes
-        x = jnp.asarray(chunks)
-        if args.mode == "two_phase":
-            cleaned, det, n_real = preprocess_two_phase(
-                cfg, x, rules, pad_multiple=max(1, len(jax.devices())))
-            kept = n_real
-        else:
-            out = jax.jit(lambda a: preprocess_fused(cfg, a, rules))(x)
-            kept = int(np.asarray(out.keep).sum())
-            det = out
-        stats = {k: float(v) for k, v in det.stats.items()}
-        agg = stats if agg is None else {
-            k: agg[k] + stats[k] for k in stats}
-        tot_kept += kept
-        tot_chunks += int(stats["n_chunks5"])
+    for res in pre.run(loader):
+        w = float(res.det.stats["n_chunks5"])    # weight: chunks in batch
+        for k in _FRAC_KEYS:
+            agg[k] += float(res.det.stats[k]) * w
+        tot_bytes += res.src_bytes
+        tot_kept += res.n_kept
+        tot_chunks += int(w)
+        last_keep = res.det.keep
     dt = time.time() - t0
-    n = n_batches
-    print(f"mode={args.mode}  {tot_bytes / 2**20:.0f} MB source audio "
+    if tot_chunks == 0:
+        print("empty stream: the loader yielded no batches — nothing to do")
+        return 0
+    frac = {k: agg[k] / tot_chunks for k in _FRAC_KEYS}
+    print(f"plan={args.plan}  {tot_bytes / 2**20:.0f} MB source audio "
           f"in {dt:.1f}s  ->  {tot_bytes / 2**20 / dt:.2f} MB/s")
     print(f"chunks kept {tot_kept}/{tot_chunks} "
-          f"(rain {agg['frac_rain']/n:.1%}, silence {agg['frac_silence']/n:.1%}, "
-          f"cicada-filtered {agg['frac_cicada15']/n:.1%})")
-    bs = jax.jit(lambda k: balance_stats(k, len(jax.devices())))(det.keep)
+          f"(rain {frac['frac_rain']:.1%}, "
+          f"silence {frac['frac_silence']:.1%}, "
+          f"cicada-filtered {frac['frac_cicada15']:.1%})")
+    bs = jax.jit(lambda k: balance_stats(k, len(jax.devices())))(last_keep)
     print(f"survivor load imbalance (max/mean): "
           f"{float(bs['imbalance']):.3f} -> "
           f"{float(bs['imbalance_after_compact']):.3f} after compaction")

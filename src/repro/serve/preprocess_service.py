@@ -1,0 +1,72 @@
+"""Serving glue for the preprocessing facade: a host-side request queue
+that pumps 60 s long-chunk requests through a `Preprocessor` plan in
+fixed-size batches (the audio twin of `serve.engine.RequestQueue`, and the
+serving analogue of the paper's slave pull queue).
+
+Each request is one stereo long chunk; its result is the per-final-chunk
+keep mask plus the cleaned surviving chunks — what a downstream species
+classifier or archive-compaction consumer needs.
+"""
+from __future__ import annotations
+
+import collections
+
+import numpy as np
+
+from repro.core.plans import Preprocessor
+from repro.distributed.sharding import NULL_RULES
+
+
+class PreprocessService:
+    def __init__(self, cfg, rules=NULL_RULES, plan="two_phase",
+                 batch_long_chunks=4, pad_multiple=1):
+        self.cfg = cfg
+        self.batch = batch_long_chunks
+        self.pre = Preprocessor(cfg, rules, plan=plan,
+                                pad_multiple=pad_multiple)
+        self._queue = collections.deque()
+        self._results = {}
+        self._next_id = 0
+
+    def submit(self, long_chunk) -> int:
+        """long_chunk: (C, S_long_src) one 60 s stereo chunk. Returns a
+        request id."""
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append((rid, np.asarray(long_chunk, np.float32)))
+        return rid
+
+    def pump(self):
+        """Run one full (padded) batch through the plan; returns the
+        completed request ids."""
+        if not self._queue:
+            return []
+        rids, chunks = [], []
+        while self._queue and len(chunks) < self.batch:
+            rid, c = self._queue.popleft()
+            rids.append(rid)
+            chunks.append(c)
+        while len(chunks) < self.batch:          # pad with copies
+            chunks.append(chunks[-1])
+        res = self.pre(np.stack(chunks))
+        keep = np.asarray(res.det.keep)
+        rain = np.asarray(res.det.rain)
+        silence = np.asarray(res.det.silence)
+        per = keep.size // len(chunks)           # final chunks per request
+        # survivors are compacted in stable order: request j's cleaned rows
+        # sit at [sum(keep[:j*per]), sum(keep[:(j+1)*per])). Masks are
+        # sliced PER REQUEST — batch-level stats would be skewed by the
+        # pad copies and the other requests in the batch.
+        offs = np.concatenate([[0], np.cumsum(keep)])
+        for j, rid in enumerate(rids):
+            lo, hi = j * per, (j + 1) * per
+            self._results[rid] = {
+                "keep": keep[lo:hi],
+                "rain": rain[lo:hi],
+                "silence": silence[lo:hi],
+                "cleaned": res.cleaned[offs[lo]:offs[hi]],
+            }
+        return rids
+
+    def result(self, rid):
+        return self._results.get(rid)

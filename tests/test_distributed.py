@@ -55,7 +55,8 @@ _SUBPROCESS_TEMPLATE = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.launch.mesh import _make_mesh
 {body}
 print("SUBPROC_OK")
 """
@@ -75,7 +76,7 @@ def _run_subprocess(body):
 def test_collective_matmul_matches_einsum():
     _run_subprocess("""
     from repro.distributed.collective_matmul import ag_matmul
-    mesh = jax.make_mesh((4,), ("model",), axis_types=(AxisType.Auto,))
+    mesh = _make_mesh((4,), ("model",))
     rng = np.random.RandomState(0)
     x = jnp.asarray(rng.randn(16, 8).astype(np.float32))
     w = jnp.asarray(rng.randn(8, 12).astype(np.float32))
@@ -90,21 +91,20 @@ def test_pipeline_sharded_matches_single_device():
     parallelism (the paper's distribution-invariance requirement)."""
     _run_subprocess("""
     from repro.configs import SERF_AUDIO as cfg
-    from repro.core.pipeline import detection_phase
+    from repro.core.plans import Preprocessor
     from repro.data.synthetic import generate_labelled
     from repro.distributed.sharding import ShardingRules
     audio, labels = generate_labelled(3, 4*12, segment_s=5.0)
     S5 = audio.shape[-1]
     chunks = (audio.reshape(4, 12, 2, S5).transpose(0, 2, 1, 3)
               .reshape(4, 2, 12*S5))
-    mesh = jax.make_mesh((4, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,)*2)
+    mesh = _make_mesh((4, 1), ("data", "model"))
     rules = ShardingRules(mesh)
     x = jax.device_put(jnp.asarray(chunks),
                        NamedSharding(mesh, P("data", None, None)))
     with mesh:
-        det_sh = jax.jit(lambda a: detection_phase(cfg, a, rules))(x)
-    det_1 = jax.jit(lambda a: detection_phase(cfg, a))(jnp.asarray(chunks))
+        det_sh = Preprocessor(cfg, rules).detect(x)
+    det_1 = Preprocessor(cfg).detect(jnp.asarray(chunks))
     np.testing.assert_array_equal(np.asarray(det_sh.keep),
                                   np.asarray(det_1.keep))
     np.testing.assert_allclose(np.asarray(det_sh.wave5),
@@ -132,8 +132,7 @@ def test_train_step_sharded_matches_single_device():
     from repro.distributed.sharding import NULL_RULES
     p1, s1, m1 = jax.jit(make_train_step(model, NULL_RULES, opt))(
         params, state, batch)
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(AxisType.Auto,)*2)
+    mesh = _make_mesh((2, 2), ("data", "model"))
     rules = ShardingRules(mesh)
     pspecs, ospecs = train_state_specs(model, opt)
     p_sh = tree_shardings(rules, pspecs)

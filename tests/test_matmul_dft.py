@@ -42,17 +42,19 @@ def test_istft_matmul_roundtrip():
 
 def test_pipeline_masks_identical_under_matmul_backend():
     """The dry-run path (matmul mode, bf16 streams) must reach the same
-    keep/remove decisions as the CPU fft path."""
+    keep/remove decisions as the CPU fft path. The compile cache keys on
+    the backend mode, so the two runs really are separate traces."""
     from repro.configs import SERF_AUDIO as cfg
-    from repro.core.pipeline import detection_phase
+    from repro.core.plans import Preprocessor
     from repro.data.synthetic import generate_labelled
     audio, _ = generate_labelled(4, 4 * 12, segment_s=5.0)
     S5 = audio.shape[-1]
     chunks = jnp.asarray(audio.reshape(4, 12, 2, S5).transpose(0, 2, 1, 3)
                          .reshape(4, 2, 12 * S5))
-    det_fft = jax.jit(lambda a: detection_phase(cfg, a))(chunks)
+    pre = Preprocessor(cfg)
+    det_fft = pre.detect(chunks)
     with backend.use("matmul"):
-        det_mm = jax.jit(lambda a: detection_phase(cfg, a))(chunks)
+        det_mm = pre.detect(chunks)
     np.testing.assert_array_equal(np.asarray(det_fft.keep),
                                   np.asarray(det_mm.keep))
     np.testing.assert_array_equal(np.asarray(det_fft.rain),

@@ -1,14 +1,12 @@
 """End-to-end pipeline behaviour on the synthetic labelled stream: detector
 quality (the paper's Tables 4-6 axes), early-exit bookkeeping, and fused vs
-two-phase equivalence."""
-import jax
+two-phase equivalence — all through the Preprocessor facade."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import SERF_AUDIO as cfg
-from repro.core.pipeline import (detection_phase, preprocess_fused,
-                                 preprocess_two_phase)
+from repro.core.plans import Preprocessor
 from repro.data.synthetic import generate_labelled, LABELS
 
 
@@ -19,7 +17,7 @@ def stream():
     S5 = audio.shape[-1]
     chunks = (audio.reshape(n_long, 12, 2, S5).transpose(0, 2, 1, 3)
               .reshape(n_long, 2, 12 * S5))
-    det = jax.jit(lambda a: detection_phase(cfg, a))(jnp.asarray(chunks))
+    det = Preprocessor(cfg).detect(jnp.asarray(chunks))
     return chunks, labels, det
 
 
@@ -70,13 +68,27 @@ def test_cicada_band_removal_reduces_band_energy(stream):
 def test_two_phase_matches_fused_on_survivors(stream):
     chunks, _, det = stream
     x = jnp.asarray(chunks[:4])
-    fused = jax.jit(lambda a: preprocess_fused(cfg, a))(x)
-    cleaned, det2, n = preprocess_two_phase(cfg, x, pad_multiple=1)
-    keep = np.asarray(det2.keep)
-    np.testing.assert_array_equal(keep, np.asarray(fused.keep))
-    want = np.asarray(fused.wave5)[keep]
-    np.testing.assert_allclose(cleaned, want, rtol=1e-4, atol=1e-5)
-    assert n == keep.sum()
+    fused = Preprocessor(cfg, plan="fused")(x)
+    two = Preprocessor(cfg, plan="two_phase", pad_multiple=1)(x)
+    keep = np.asarray(two.det.keep)
+    np.testing.assert_array_equal(keep, np.asarray(fused.det.keep))
+    want = np.asarray(fused.det.wave5)[keep]
+    np.testing.assert_allclose(two.cleaned, want, rtol=1e-4, atol=1e-5)
+    assert two.n_kept == keep.sum()
+
+
+def test_deprecated_shims_match_facade(stream):
+    """The seed entry points survive as thin shims over the stage graph."""
+    chunks, _, _ = stream
+    x = jnp.asarray(chunks[:2])
+    with pytest.warns(DeprecationWarning):
+        from repro.core.pipeline import preprocess_two_phase
+        cleaned, det, n = preprocess_two_phase(cfg, x, pad_multiple=1)
+    res = Preprocessor(cfg, plan="two_phase", pad_multiple=1)(x)
+    assert n == res.n_kept
+    np.testing.assert_array_equal(np.asarray(det.keep),
+                                  np.asarray(res.det.keep))
+    np.testing.assert_allclose(cleaned, res.cleaned, rtol=1e-5)
 
 
 def test_mmse_reduces_background_noise_keeps_signal():

@@ -1,8 +1,12 @@
 """Hypothesis property-based tests on system invariants (per the brief)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
-import hypothesis.extra.numpy as hnp
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment")
+from hypothesis import given, settings, strategies as st   # noqa: E402
+import hypothesis.extra.numpy as hnp                       # noqa: E402
 
 from repro.core import indices as I
 from repro.core import scheduler as SCHED

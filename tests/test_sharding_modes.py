@@ -36,13 +36,12 @@ def test_zero3_and_sp_ep_match_unsharded_loss():
     _run("""
     import dataclasses
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType
     from repro.configs import ARCHS, reduced
+    from repro.launch.mesh import _make_mesh
     from repro.models.zoo import build_model
     from repro.distributed.sharding import (ShardingRules, tree_shardings,
                                             NULL_RULES)
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = _make_mesh((2, 2), ("data", "model"))
     for arch, mode in [("llama3.2-3b", "zero3"),
                        ("granite-moe-3b-a800m", "sp_ep")]:
         cfg = dataclasses.replace(reduced(ARCHS[arch]), dtype="float32")

@@ -59,15 +59,14 @@ def test_audio_loader_shapes():
 def test_early_exit_saves_mmse_work():
     """The paper's headline economy: MMSE runs on survivors only. Verify the
     survivor fraction is materially < 1 on a rainy/silent stream."""
-    from repro.core.pipeline import detection_phase
+    from repro.core.plans import Preprocessor
     from repro.data.synthetic import generate_labelled
     audio, labels = generate_labelled(
         11, 4 * 12, segment_s=5.0, label_probs=(0.2, 0.4, 0.05, 0.35))
     S5 = audio.shape[-1]
     chunks = (audio.reshape(4, 12, 2, S5).transpose(0, 2, 1, 3)
               .reshape(4, 2, 12 * S5))
-    det = jax.jit(lambda a: detection_phase(SERF_AUDIO, a))(
-        jnp.asarray(chunks))
+    det = Preprocessor(SERF_AUDIO).detect(jnp.asarray(chunks))
     frac_kept = float(det.stats["frac_kept"])
     assert frac_kept < 0.7          # the early exit is doing real work
     assert frac_kept > 0.05         # ... without deleting everything
