@@ -63,6 +63,25 @@ def run(hours=2.0, trials=4):
         "before": float(bs["imbalance"]),
         "after": float(bs["imbalance_after_compact"]),
     }
+
+    # cross-shard survivor re-balancing (ShardedPlan's detection -> MMSE
+    # handoff): a skewed stream — one shard's chunks mostly survive, the
+    # other's mostly die — must come out near-even after the re-shard
+    from repro.core.scheduler import Rebalancer
+    keep_np = np.asarray(det.keep)
+    order = np.argsort(~keep_np, kind="stable")   # survivors first = skew
+    skewed = keep_np[order].reshape(4, -1)
+    asg = Rebalancer(4).assign(list(skewed))
+    st = asg.stats()
+    print(f"cross-shard re-balance on a skewed stream: "
+          f"{st['loads_before'].tolist()} -> {st['loads_after'].tolist()} "
+          f"(max/min {st['max_min_before']:.2f} -> "
+          f"{st['max_min_after']:.2f}, moved {st['moved']})")
+    out["rebalance"] = {
+        "before": st["loads_before"].tolist(),
+        "after": st["loads_after"].tolist(),
+        "max_min_after": st["max_min_after"],
+    }
     save_json("load_balance", out)
 
 

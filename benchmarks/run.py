@@ -16,7 +16,10 @@ import traceback
 def smoke():
     """One tiny batch stream through EVERY registered execution plan:
     survivor sets must match bit-for-bit and cleaned audio to rtol=1e-4, so
-    executor regressions fail fast (scripts/verify.sh runs this)."""
+    executor regressions fail fast (scripts/verify.sh runs this). Then the
+    sharded fault-tolerance gate: 2 simulated shards with a forced lease
+    expiry AND a mid-stream worker crash must finish with redeliveries >= 1
+    and zero lost or duplicated chunks."""
     import numpy as np
     from repro.configs import SERF_AUDIO as cfg
     from repro.core.plans import PLANS, Preprocessor
@@ -33,7 +36,7 @@ def smoke():
         t0 = time.time()
         try:
             pre = Preprocessor(cfg, plan=name, pad_multiple=1)
-            results = list(pre.run(stream))
+            results = sorted(pre.run(stream), key=lambda r: r.wid)
             keep = np.concatenate([np.asarray(r.det.keep) for r in results])
             cleaned = np.concatenate([r.cleaned for r in results])
             assert np.isfinite(cleaned).all(), "non-finite output"
@@ -50,9 +53,52 @@ def smoke():
         except Exception:
             failures.append(name)
             traceback.print_exc()
-    print(f"\nsmoke: {len(PLANS) - len(failures)}/{len(PLANS)} plans OK"
-          + (f"; FAILED: {failures}" if failures else ""))
+    try:
+        _ft_smoke(np, cfg, Preprocessor)
+    except Exception:
+        failures.append("sharded-ft")
+        traceback.print_exc()
+    print(f"\nsmoke: {len(PLANS) + 1 - len(failures)}/{len(PLANS) + 1} "
+          f"gates OK" + (f"; FAILED: {failures}" if failures else ""))
     raise SystemExit(1 if failures else 0)
+
+
+def _ft_smoke(np, cfg, Preprocessor):
+    """ShardedPlan recovery gate: a lease forced to expire before the run
+    plus shard 1 crashing mid-stream; every chunk id must come out exactly
+    once, with at least one queue redelivery."""
+    from repro.data.loader import audio_batch_maker, make_shard_pool
+    from repro.data.queue import SettableClock, WorkQueue
+    from repro.ft.failure import CrashInjector
+
+    t0 = time.time()
+    n_batches = 5
+    clock = SettableClock()
+    queue = WorkQueue(n_batches, lease_timeout_s=30.0, clock=clock)
+    ghost = queue.lease("ghost", 1)        # a worker that died pre-run
+    clock.t = 31.0                         # ... and whose lease has expired
+    injector = CrashInjector()
+    injector.kill(1, after_items=1)        # shard 1 dies mid-stream
+    make = audio_batch_maker(seed=3, batch_long_chunks=2)
+    pool = make_shard_pool(make, n_batches, 2, queue=queue)
+    pre = Preprocessor(cfg, plan="sharded", shards=2, pad_multiple=1,
+                       injector=injector)
+    results = list(pre.run(pool))
+    wids = sorted(r.wid for r in results)
+    assert wids == list(range(n_batches)), \
+        f"lost/duplicated chunks: emitted {wids}"
+    assert pre.plan.redeliveries >= 1, "expected at least one redelivery"
+    ref = Preprocessor(cfg, plan="two_phase", pad_multiple=1)
+    for r in sorted(results, key=lambda r: r.wid):
+        want = ref(make(r.wid)[0])
+        np.testing.assert_array_equal(np.asarray(r.det.keep),
+                                      np.asarray(want.det.keep))
+        np.testing.assert_allclose(r.cleaned, want.cleaned,
+                                   rtol=1e-4, atol=1e-5)
+    print(f"plan sharded-ft OK: wid {ghost[0]} redelivered after forced "
+          f"lease expiry, shard 1 crashed, {len(wids)}/{n_batches} chunk "
+          f"ids exactly once, redeliveries={pre.plan.redeliveries} "
+          f"in {time.time() - t0:.1f}s")
 
 
 def main():

@@ -2,7 +2,10 @@
 # Tier-1 verification gate (see ROADMAP.md "Tier-1 verify"):
 #   1. the repo's own test suite
 #   2. the executor smoke: one tiny batch through every registered
-#      execution plan (survivor sets must agree bit-for-bit)
+#      execution plan (survivor sets must agree bit-for-bit), PLUS the
+#      sharded fault-tolerance gate — ShardedPlan over 2 simulated shards
+#      with a forced lease expiry and a mid-stream worker crash must
+#      finish with redeliveries >= 1 and zero lost/duplicated chunks
 #
 #   bash scripts/verify.sh [extra pytest args]
 set -euo pipefail

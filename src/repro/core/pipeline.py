@@ -1,12 +1,13 @@
-"""DEPRECATED entry points for the unified preprocessing pipeline.
+"""Compatibility re-exports for the unified preprocessing pipeline.
 
-The pipeline is now a composable stage graph (the paper's one profiled
-order, expressed as config data):
+The pipeline is a composable stage graph (the paper's one profiled order,
+expressed as config data):
 
   * `repro.core.graph`  — `Stage` protocol + `STAGES` registry +
     `PipelineGraph` (build-time shape validation, `removal_point` markers).
-  * `repro.core.plans`  — `FusedPlan` / `TwoPhasePlan` / `StreamingPlan`
-    behind the `Preprocessor` facade, with a keyed LRU compile cache.
+  * `repro.core.plans`  — `FusedPlan` / `TwoPhasePlan` / `StreamingPlan` /
+    `ShardedPlan` behind the `Preprocessor` facade, with a keyed LRU
+    compile cache.
 
 The paper's stage order lives on `AudioPipelineConfig.stages`:
 
@@ -14,65 +15,17 @@ The paper's stage order lives on `AudioPipelineConfig.stages`:
   stft (once) -> detect_rain -> cicada_bandstop -> istft ->
   split_final(5 s) -> detect_silence -> removal_point -> mmse
 
-New code should use:
+Use:
 
     from repro.core.plans import Preprocessor
     pre = Preprocessor(cfg, rules, plan="two_phase")
     res = pre(audio_src)                  # one batch
     for res in pre.run(loader): ...       # a stream
 
-This module keeps thin shims for the seed API (`detection_phase`,
-`mmse_phase`, `preprocess_fused`, `preprocess_two_phase`); they delegate to
-the graph built from `cfg.stages` and will be removed once nothing imports
-them.
+The seed-era shims (`detection_phase`, `mmse_phase`, `preprocess_fused`,
+`preprocess_two_phase`) have been REMOVED now that nothing imports them;
+only the graph re-exports below remain for older call sites.
 """
 from __future__ import annotations
 
-import functools
-import warnings
-
-import numpy as np
-
 from repro.core.graph import PipelineGraph, PipelineOutput  # noqa: F401
-from repro.core.plans import TwoPhasePlan
-from repro.distributed.sharding import NULL_RULES
-
-
-@functools.lru_cache(maxsize=16)
-def _default_graph(cfg) -> PipelineGraph:
-    return PipelineGraph(cfg)
-
-
-def _deprecated(name):
-    warnings.warn(
-        f"repro.core.pipeline.{name} is deprecated; use "
-        f"repro.core.plans.Preprocessor", DeprecationWarning, stacklevel=3)
-
-
-def detection_phase(cfg, audio_src, rules=NULL_RULES):
-    """Deprecated: `Preprocessor(cfg, rules).detect(audio_src)`."""
-    _deprecated("detection_phase")
-    return _default_graph(cfg).detection(audio_src, rules)
-
-
-def mmse_phase(cfg, wave5, rules=NULL_RULES):
-    """Deprecated: the graph tail past the removal point."""
-    _deprecated("mmse_phase")
-    return _default_graph(cfg).tail(wave5, rules)
-
-
-def preprocess_fused(cfg, audio_src, rules=NULL_RULES):
-    """Deprecated: `Preprocessor(cfg, rules, plan="fused")(audio_src)`."""
-    _deprecated("preprocess_fused")
-    return _default_graph(cfg).fused(audio_src, rules)
-
-
-def preprocess_two_phase(cfg, audio_src, rules=NULL_RULES, pad_multiple=1):
-    """Deprecated: `Preprocessor(cfg, rules, plan="two_phase")`.
-
-    Returns (cleaned survivors (n_kept, S5) np, PipelineOutput, n_kept) —
-    the seed signature."""
-    _deprecated("preprocess_two_phase")
-    plan = TwoPhasePlan(_default_graph(cfg), rules, pad_multiple)
-    res = plan(audio_src)
-    return np.asarray(res.cleaned), res.det, res.n_kept

@@ -1,31 +1,50 @@
 """Execution plans: HOW a validated `PipelineGraph` runs on a batch stream.
 
 The graph fixes WHAT computes (stage order, removal points); a plan picks
-the execution strategy:
+the execution strategy. Four plans, and when to pick each:
 
   * `FusedPlan`     — one jit straight through; removed chunks are masked
                       but still computed (the paper's no-early-exit
-                      baseline).
+                      baseline). Pick for graphs without a removal point,
+                      for correctness references, or when survivor rates
+                      are so high that early exit buys nothing.
   * `TwoPhasePlan`  — detection jit -> host reads the keep mask (the
                       paper's master bookkeeping) -> survivors compacted /
                       re-batched -> tail jit on the survivor batch only.
                       The paper's headline economy: MMSE cost scales with
-                      surviving audio.
+                      surviving audio. Pick as the single-stream default.
   * `StreamingPlan` — two-phase with dispatch-ahead over a loader: phase-A
                       detection of batch k+1 is enqueued on the device
                       before phase B of batch k, so host-side mask readback
-                      + compaction overlap device work.
+                      + compaction overlap device work. Pick for long
+                      single-host streams where readback latency shows.
+  * `ShardedPlan`   — the multi-shard execution backbone: per-shard
+                      `ShardedLoader`s pull leased work ids from ONE shared
+                      `WorkQueue` (at-least-once redelivery on lease expiry
+                      replaces the paper's crash-tracking master), and
+                      between detection and MMSE a `Rebalancer` re-assigns
+                      survivors across shards (the paper's Figs 14-16 even-
+                      load claim, kept true under skewed noise regimes).
+                      Completion gates emission, so output stays exactly-
+                      once on top of at-least-once delivery; a worker crash
+                      mid-stream resumes from queue state with no lost or
+                      duplicated chunks. Pick for multi-host / multi-worker
+                      runs, or whenever fault tolerance matters.
 
 All plans sit behind the `Preprocessor` facade, and all jitted phases live
 in one keyed LRU `CompileCache`. Keys are *value* fingerprints — config,
-stage list, `ShardingRules.fingerprint` (mesh shape + rule table), kernel
-backend mode — never object ids, so logically-equal rules objects share
-compiles and the cache cannot alias after GC reuses an id (the old
-`_JIT_CACHE`/`id(rules)` bug).
+stage list, `ShardingRules.fingerprint` (mesh shape + rule table + device
+ids), kernel backend mode — never object ids, so logically-equal rules
+objects share compiles and the cache cannot alias after GC reuses an id
+(the old `_JIT_CACHE`/`id(rules)` bug). `ShardedPlan` accepts per-shard
+rules (`distributed.sharding.pool_rules`): same-mesh shards share one
+compile, per-host meshes key separately by device ids.
 """
 from __future__ import annotations
 
 import collections
+import operator
+import time
 from dataclasses import dataclass, field, replace
 
 import jax
@@ -35,6 +54,7 @@ import numpy as np
 from repro.core import scheduler as SCHED
 from repro.core.graph import (GraphValidationError, PipelineGraph,
                               PipelineOutput)
+from repro.data.loader import ShardedLoader, make_shard_pool
 from repro.distributed.sharding import NULL_RULES
 from repro.kernels import backend
 
@@ -100,6 +120,17 @@ class BatchResult:
     wid: object = None              # loader work id (when run over a loader)
     labels: object = field(default=None, repr=False)   # loader passthrough
     src_bytes: int = 0              # measured input bytes (throughput acct)
+
+
+class _StreamMeta:
+    """Internal marker for ShardedPlan's plain-stream wrapper: carries the
+    ORIGINAL stream wid + labels through the queue as the item's `extra`,
+    unambiguously distinct from user labels that happen to be tuples."""
+    __slots__ = ("wid", "labels")
+
+    def __init__(self, wid, labels):
+        self.wid = wid
+        self.labels = labels
 
 
 def _iter_batches(batches):
@@ -203,7 +234,248 @@ class StreamingPlan(TwoPhasePlan):
             yield self._finish(*pending)
 
 
-PLANS = {p.name: p for p in (FusedPlan, TwoPhasePlan, StreamingPlan)}
+class ShardedPlan(TwoPhasePlan):
+    """Fault-tolerant multi-shard execution over a shared leased WorkQueue.
+
+    The round loop (one round = every live shard pulls up to lease_items):
+
+      pull    each live shard leases work ids from the SHARED queue and
+              dispatches detection under its own rules/mesh; a scripted
+              `CrashInjector` can kill a shard mid-pull, leaving its lease
+              un-completed (the recovery paths are lease expiry and
+              `fail_worker`, exactly the paper's crashed-slave re-send).
+      shuffle the `Rebalancer` reads every keep mask back ONCE, packs
+              survivors in (shard, item) order, and re-slices them near-
+              evenly across the live shards — the plan, not the driver,
+              owns the mask readback + re-shard decision.
+      finish  per-shard tail (MMSE) jits run on the re-balanced survivor
+              batches; cleaned rows are scattered back to their source work
+              ids; `queue.complete` gates emission so each work id is
+              emitted exactly once even when redelivery raced a straggler.
+
+    `rules` may be a single ShardingRules (shared mesh) or one per shard
+    (`distributed.sharding.pool_rules`); compiles land in the shared
+    CompileCache keyed by each shard's value fingerprint.
+    """
+    name = "sharded"
+
+    def __init__(self, graph, rules=NULL_RULES, pad_multiple=1, shards=2,
+                 lease_items=1, injector=None, monitor=None):
+        self.shards = max(1, int(shards))
+        if isinstance(rules, (list, tuple)):
+            if len(rules) != self.shards:
+                raise ValueError(
+                    f"got {len(rules)} per-shard rules for {self.shards} "
+                    f"shards")
+            pool = tuple(rules)
+        else:
+            pool = (rules,) * self.shards
+        super().__init__(graph, pool[0], pad_multiple)
+        self.rules_pool = pool
+        self.lease_items = lease_items
+        self.injector = injector
+        self.monitor = monitor
+        self.rebalancer = SCHED.Rebalancer(self.shards, pad_multiple)
+        self.redeliveries = 0           # mirrored off the queue after run()
+        self.last_assignment = None     # last round's ShardAssignment
+        self._release = None            # stream-item drop hook (see run())
+
+    # -- per-shard phase dispatch (shared CompileCache, per-shard rules) ----
+    def _detect_on(self, shard, audio):
+        return _jitted("detect", self.graph, self.rules_pool[shard])(audio)
+
+    def _tail_on(self, shard, batch):
+        return _jitted("tail", self.graph, self.rules_pool[shard])(batch)
+
+    # -- single batch: row-split across shards, rebalance, reassemble -------
+    def __call__(self, audio) -> BatchResult:
+        x = np.asarray(audio, np.float32)
+        parts = [(j, p) for j, p in enumerate(np.array_split(x, self.shards))
+                 if len(p)]
+        dets = [(j, self._detect_on(j, jnp.asarray(p))) for j, p in parts]
+        det = _merge_outputs([d for _, d in dets])
+        waves_keeps = [(np.asarray(d.wave5), np.asarray(d.keep))
+                       for _, d in dets]
+        cleaned, asg = self._rebalanced_tail(
+            waves_keeps, [k for _, k in waves_keeps],
+            live=[j for j, _ in dets])
+        self.last_assignment = asg
+        return BatchResult(cleaned=cleaned, det=det,
+                           n_kept=int(np.asarray(det.keep).sum()),
+                           src_bytes=int(x.nbytes))
+
+    def _rebalanced_tail(self, item_waves_keeps, shard_keeps, live):
+        """Rebalanced phase B. item_waves_keeps: [(wave5, keep)] per
+        detected item in packed order; shard_keeps: one concatenated keep
+        mask per LIVE shard (same packed order) — the assignment is made
+        per shard, survivors are packed per item. Returns (cleaned rows in
+        packed survivor order, ShardAssignment)."""
+        asg = self.rebalancer.assign(shard_keeps, out_shards=len(live))
+        surv = [w[k] for w, k in item_waves_keeps if k.any()]
+        if not surv:
+            width = (item_waves_keeps[0][0].shape[1]
+                     if item_waves_keeps else 0)
+            return np.zeros((0, width), np.float32), asg
+        packed = np.concatenate(surv)
+        cleaned = np.empty_like(packed)
+        for slot, batch, n_real in self.rebalancer.split(packed, asg):
+            lo = int(asg.bounds[slot])
+            out = self._tail_on(live[slot], jnp.asarray(batch))
+            cleaned[lo:lo + n_real] = np.asarray(out)[:n_real]
+        return cleaned, asg
+
+    # -- streams ------------------------------------------------------------
+    def run(self, batches):
+        """Accepts a ShardedLoader pool (the multi-host path) or any plain
+        batch stream, which is wrapped behind an internal WorkQueue so
+        single-stream callers get the same leased, rebalanced execution.
+        Sized streams (lists, loaders with __len__) are drawn lazily and
+        each item is dropped once its work id completes, so memory stays
+        O(in-flight); only unsized generators are materialised up front."""
+        if isinstance(batches, (list, tuple)) and batches and \
+                all(isinstance(b, ShardedLoader) for b in batches):
+            yield from self.run_pool(list(batches))
+            return
+        n = operator.length_hint(batches, -1)
+        it = _iter_batches(batches)
+        if n < 0:
+            drained = list(it)
+            n, it = len(drained), iter(drained)
+        store, cursor = {}, [0]
+
+        def make(i):
+            while cursor[0] <= i:
+                wid, chunks, extra = next(it)
+                store[cursor[0]] = (chunks, _StreamMeta(wid, extra))
+                cursor[0] += 1
+            return store[i]
+
+        pool = make_shard_pool(make, n, self.shards,
+                               lease_items=self.lease_items)
+        self._release = store.pop
+        try:
+            yield from self.run_pool(pool)
+        finally:
+            self._release = None
+
+    def run_pool(self, pool):
+        # shard-ascending order keeps the packed survivor order consistent
+        # with the per-shard masks handed to the Rebalancer
+        pool = sorted(pool, key=lambda ld: ld.shard)
+        queue = pool[0].queue
+        assert all(ld.queue is queue for ld in pool), \
+            "a shard pool must share one WorkQueue"
+        bad = sorted({ld.shard for ld in pool} - set(range(self.shards)))
+        if bad:
+            raise ValueError(
+                f"pool shard ids {bad} out of range for a "
+                f"{self.shards}-shard plan")
+        stalls = 0
+        while not queue.finished:
+            round_work = []          # (shard, wid, det, extra, nbytes)
+            for ld in pool:
+                if not self._alive(ld.shard):
+                    continue
+                if self.monitor is not None:
+                    self.monitor.beat(ld.worker)
+                for wid, item in ld.pull():
+                    if self.injector is not None and \
+                            not self.injector.on_pull(ld.shard):
+                        break        # died holding this lease
+                    chunks, extra = item if isinstance(item, tuple) \
+                        else (item, None)
+                    x = jnp.asarray(chunks)
+                    det = self._detect_on(ld.shard, x)   # async dispatch
+                    round_work.append((ld.shard, wid, det, extra,
+                                       int(x.nbytes)))
+            if round_work:
+                stalls = 0
+                yield from self._finish_round(queue, round_work)
+                continue
+            if self._reclaim(queue, pool) or queue.finished:
+                continue
+            deadline = queue.next_deadline()
+            stalls += 1
+            if deadline is not None and stalls <= 8 and \
+                    any(self._alive(ld.shard) for ld in pool):
+                # a lease nothing declared dead is still ticking (a worker
+                # outside this pool, or an undetected death): wait out the
+                # deadline so the next pull reaps and redelivers it. Only
+                # wall clocks advance while we sleep; injected clocks
+                # (SettableClock etc.) re-poll and hit the stall cap fast.
+                if queue.clock in (time.monotonic, time.time):
+                    time.sleep(max(0.0, min(deadline - queue.clock(),
+                                            queue.lease_timeout_s)) + 1e-3)
+                continue
+            raise RuntimeError(
+                "sharded plan stalled: work is leased but no live shard "
+                f"can make progress (progress {queue.progress()})")
+        self.redeliveries = queue.redeliveries
+
+    def _alive(self, shard):
+        return self.injector is None or self.injector.alive(shard)
+
+    def _reclaim(self, queue, pool):
+        """All pending work is held by dead shards: return their leases
+        (the heartbeat/injector 'said dead' fast path; a slower deployment
+        without either still recovers via lease-deadline expiry on the next
+        pull). True if any work came back."""
+        dead_workers = {ld.worker for ld in pool if not self._alive(ld.shard)}
+        if self.monitor is not None:
+            dead_workers |= set(self.monitor.dead())
+        got = 0
+        for w in sorted(dead_workers):
+            got += len(queue.fail_worker(w))
+        return got > 0
+
+    def _finish_round(self, queue, round_work):
+        """Rebalanced phase B for one round, then exactly-once emission in
+        work-id completion order."""
+        live = sorted({s for s, *_ in round_work})
+        item_wk = [(np.asarray(d.wave5), np.asarray(d.keep))
+                   for _, _, d, _, _ in round_work]
+        # packed per (shard, item) order == round_work order (pool order),
+        # so the per-shard masks are contiguous slices of it
+        shard_keeps = [np.concatenate(
+            [k for (s, *_), (_, k) in zip(round_work, item_wk) if s == s2])
+            for s2 in live]
+        cleaned_all, asg = self._rebalanced_tail(item_wk, shard_keeps, live)
+        self.last_assignment = asg
+        offs = np.concatenate(
+            [[0], np.cumsum([k.sum() for _, k in item_wk])]).astype(int)
+        for i, (shard, wid, det, extra, nbytes) in enumerate(round_work):
+            if not queue.complete([wid]):
+                continue             # redelivery raced a straggler: emitted once
+            if self._release is not None:
+                self._release(wid, None)     # drop the buffered stream item
+            orig_wid, labels = (extra.wid, extra.labels) \
+                if isinstance(extra, _StreamMeta) else (wid, extra)
+            yield BatchResult(
+                cleaned=cleaned_all[offs[i]:offs[i + 1]], det=det,
+                n_kept=int(offs[i + 1] - offs[i]), wid=orig_wid,
+                labels=labels, src_bytes=nbytes)
+
+
+def _merge_outputs(outs):
+    """Concatenate per-shard PipelineOutputs (row order preserved) with
+    chunk-count-weighted stats — the batch looks as if one shard detected
+    it."""
+    if len(outs) == 1:
+        return outs[0]
+    cat = lambda f: np.concatenate([np.asarray(getattr(o, f)) for o in outs])
+    ws = np.array([float(o.stats["n_chunks5"]) for o in outs])
+    stats = {"n_chunks5": int(ws.sum())}
+    for k in outs[0].stats:
+        if k != "n_chunks5":
+            vals = np.array([float(o.stats[k]) for o in outs])
+            stats[k] = float((vals * ws).sum() / ws.sum())
+    return PipelineOutput(wave5=cat("wave5"), keep=cat("keep"),
+                          rain=cat("rain"), silence=cat("silence"),
+                          cicada15=cat("cicada15"), stats=stats)
+
+
+PLANS = {p.name: p for p in (FusedPlan, TwoPhasePlan, StreamingPlan,
+                             ShardedPlan)}
 
 
 class Preprocessor:
@@ -215,16 +487,28 @@ class Preprocessor:
             use(res.cleaned, res.det.stats, res.n_kept)
 
     `plan` is a name from `PLANS` or an ExecutionPlan subclass; `stages`
-    overrides the config-declared stage list for ablations.
+    overrides the config-declared stage list for ablations. Extra keyword
+    arguments are forwarded to the plan (e.g. `shards=4`, `injector=...`
+    for the sharded plan).
     """
 
     def __init__(self, cfg, rules=NULL_RULES, plan="two_phase",
-                 pad_multiple=1, stages=None, source_channels=2):
+                 pad_multiple=1, stages=None, source_channels=2,
+                 **plan_kwargs):
         self.cfg = cfg
-        self.rules = rules
+        # facade-level detect()/phase_fn() use one rules object even when
+        # the plan gets a per-shard list (sharded multi-host pools)
+        self.rules = rules[0] if isinstance(rules, (list, tuple)) and rules \
+            else rules
         self.graph = PipelineGraph(cfg, stages, source_channels)
         plan_cls = PLANS[plan] if isinstance(plan, str) else plan
-        self.plan = plan_cls(self.graph, rules, pad_multiple)
+        if isinstance(rules, (list, tuple)) and not (
+                isinstance(plan_cls, type)
+                and issubclass(plan_cls, ShardedPlan)):
+            raise ValueError(
+                "a per-shard rules list is only valid with the sharded "
+                f"plan, not {getattr(plan_cls, 'name', plan_cls)!r}")
+        self.plan = plan_cls(self.graph, rules, pad_multiple, **plan_kwargs)
 
     def __call__(self, audio) -> BatchResult:
         """One batch of (B, C, S_long_src) long chunks -> BatchResult."""

@@ -24,6 +24,23 @@ class Lease:
     deadline: float
 
 
+class SettableClock:
+    """Deterministic injectable clock for tests and simulations:
+
+        clock = SettableClock()
+        q = WorkQueue(n, lease_timeout_s=5.0, clock=clock)
+        clock.t = 10.0        # every outstanding lease is now expired
+
+    Consumers (e.g. ShardedPlan's stall path) treat any clock other than
+    `time.monotonic` / `time.time` as non-wall and skip real sleeps."""
+
+    def __init__(self, t=0.0):
+        self.t = float(t)
+
+    def __call__(self):
+        return self.t
+
+
 class WorkQueue:
     def __init__(self, n_items, lease_timeout_s=60.0, clock=time.monotonic):
         self.n_items = n_items
@@ -36,20 +53,35 @@ class WorkQueue:
 
     # -- worker API ---------------------------------------------------------
     def lease(self, worker, max_items=1):
-        """Lease up to max_items work ids (the slave's pull request)."""
+        """Lease up to max_items work ids (the slave's pull request).
+
+        Ids completed late — after their expired lease was already reaped
+        back into pending — are dropped here instead of re-delivered, so a
+        straggler that finishes just past its deadline costs nothing."""
         self._reap_expired()
         out = []
         while self._pending and len(out) < max_items:
             wid = self._pending.pop()
+            if wid in self._done:
+                continue
             self._leases[wid] = Lease(wid, worker,
                                       self.clock() + self.lease_timeout_s)
             out.append(wid)
         return out
 
     def complete(self, work_ids):
+        """Retire work ids. Returns the ids that were NEWLY retired: a late
+        completion of already-done work (the at-least-once overlap) comes
+        back empty, so callers can gate result emission on it and keep
+        exactly-once output on top of at-least-once delivery."""
+        newly = []
         for wid in work_ids:
+            if wid in self._done:
+                continue
             self._leases.pop(wid, None)
             self._done.add(wid)
+            newly.append(wid)
+        return newly
 
     def heartbeat_extend(self, worker):
         now = self.clock()
@@ -65,6 +97,12 @@ class WorkQueue:
             del self._leases[wid]
             self._pending.append(wid)
             self.redeliveries += 1
+
+    def next_deadline(self):
+        """Earliest outstanding lease deadline (None when nothing is
+        leased) — lets a stalled consumer wait out exactly the time until
+        the next reap can make progress."""
+        return min((l.deadline for l in self._leases.values()), default=None)
 
     def fail_worker(self, worker):
         """Immediately return a dead worker's leases (heartbeat said dead)."""

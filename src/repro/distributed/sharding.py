@@ -137,6 +137,24 @@ class ShardingRules:
 NULL_RULES = ShardingRules(mesh=None)
 
 
+def pool_rules(n_shards, meshes=None, mode="tp", overrides=None):
+    """Per-shard ShardingRules for a ShardedPlan.
+
+    `meshes` is one mesh shared by every shard (or None for unmeshed CPU
+    tests), or a sequence of per-shard meshes (a multi-host pool, each host
+    owning its local devices; cycled if shorter than n_shards). Each
+    returned rules object carries its own VALUE fingerprint — mesh axis
+    names, shape, and device ids — so sharded compiles land in the shared
+    `CompileCache` correctly: same-mesh shards dedup to one compiled phase
+    per (graph, shape), while shards over disjoint device sets can never
+    alias each other's jitted closures."""
+    if meshes is None or isinstance(meshes, Mesh):
+        meshes = [meshes]
+    meshes = list(meshes)
+    return [ShardingRules(meshes[j % len(meshes)], mode=mode,
+                          overrides=overrides) for j in range(n_shards)]
+
+
 def _is_spec_leaf(v):
     """A spec leaf is a (possibly empty) tuple of logical names/None —
     tuples of tuples (e.g. xLSTM state tuples) recurse instead."""

@@ -14,6 +14,49 @@ import time
 from dataclasses import dataclass, field
 
 
+class CrashInjector:
+    """Scripted worker crashes for sharded-plan simulations.
+
+    `kill(shard, after_items=n)` arms a fuse: the shard detects n more
+    pulled items normally, then dies while HOLDING its next lease — the
+    lease is neither completed nor returned, so recovery exercises the real
+    path (lease expiry or `WorkQueue.fail_worker`), mirroring the paper's
+    master that "re-sends files to different slaves if a slave disconnects
+    or crashes". `revive(shard)` brings a shard back (elastic rejoin)."""
+
+    def __init__(self):
+        self._fuse: dict[int, int] = {}
+        self._dead: set[int] = set()
+
+    def kill(self, shard, after_items=0):
+        self._fuse[shard] = int(after_items)
+
+    def revive(self, shard):
+        self._dead.discard(shard)
+        self._fuse.pop(shard, None)
+
+    def alive(self, shard) -> bool:
+        return shard not in self._dead
+
+    def on_pull(self, shard) -> bool:
+        """Called once per pulled work item BEFORE it is processed.
+        Returns False exactly when the shard dies on this pull (its lease
+        stays registered in the queue, un-completed)."""
+        if shard in self._dead:
+            return False
+        fuse = self._fuse.get(shard)
+        if fuse is not None:
+            if fuse <= 0:
+                self._dead.add(shard)
+                return False
+            self._fuse[shard] = fuse - 1
+        return True
+
+    @property
+    def crashed(self) -> frozenset:
+        return frozenset(self._dead)
+
+
 class HeartbeatMonitor:
     def __init__(self, timeout_s=30.0, clock=time.monotonic):
         self.timeout_s = timeout_s

@@ -2,11 +2,13 @@
 chunks through the stage-graph pipeline under a chosen execution plan.
 
   PYTHONPATH=src python -m repro.launch.preprocess --minutes 8 --plan streaming
+  PYTHONPATH=src python -m repro.launch.preprocess --plan sharded --shards 4
 
 Reports per-stage removal fractions and throughput (the paper's headline
 metric: MB/s of source audio preprocessed; their 4-VM x 4-core figure was
 16.4-16.5 MB/s). Per-batch stats are aggregated weighted by chunk count, so
-uneven batches don't skew the fractions.
+uneven batches don't skew the fractions. The sharded plan additionally
+reports queue redeliveries and the last round's survivor re-shard loads.
 """
 from __future__ import annotations
 
@@ -18,8 +20,8 @@ import jax
 from repro.configs import SERF_AUDIO
 from repro.core.plans import PLANS, Preprocessor
 from repro.core.scheduler import balance_stats
-from repro.data.loader import AudioChunkLoader
-from repro.distributed.sharding import ShardingRules
+from repro.data.loader import AudioChunkLoader, audio_shard_pool
+from repro.distributed.sharding import ShardingRules, pool_rules
 from repro.launch.mesh import make_local_mesh
 
 _FRAC_KEYS = ("frac_rain", "frac_silence", "frac_kept", "frac_cicada15")
@@ -31,17 +33,29 @@ def main(argv=None):
     ap.add_argument("--batch-long-chunks", type=int, default=4)
     ap.add_argument("--plan", "--mode", dest="plan", default="two_phase",
                     choices=sorted(PLANS))
+    ap.add_argument("--shards", type=int, default=2,
+                    help="simulated shard count for --plan sharded")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = SERF_AUDIO
     n_batches = max(1, int(round(args.minutes / args.batch_long_chunks)))
-    loader = AudioChunkLoader(seed=args.seed, n_batches=n_batches,
-                              batch_long_chunks=args.batch_long_chunks)
     mesh = make_local_mesh()
-    rules = ShardingRules(mesh)
-    pre = Preprocessor(cfg, rules, plan=args.plan,
-                       pad_multiple=max(1, len(jax.devices())))
+    pad = max(1, len(jax.devices()))
+    if args.plan == "sharded":
+        # per-shard loaders over ONE shared leased queue; shards share this
+        # process's mesh, so their compiles dedup in the CompileCache
+        loader = audio_shard_pool(
+            seed=args.seed, n_batches=n_batches, n_shards=args.shards,
+            batch_long_chunks=args.batch_long_chunks)
+        pre = Preprocessor(cfg, pool_rules(args.shards, mesh),
+                           plan="sharded", pad_multiple=pad,
+                           shards=args.shards)
+    else:
+        loader = AudioChunkLoader(seed=args.seed, n_batches=n_batches,
+                                  batch_long_chunks=args.batch_long_chunks)
+        pre = Preprocessor(cfg, ShardingRules(mesh), plan=args.plan,
+                           pad_multiple=pad)
 
     tot_bytes = tot_kept = tot_chunks = 0
     agg = {k: 0.0 for k in _FRAC_KEYS}
@@ -70,6 +84,16 @@ def main(argv=None):
     print(f"survivor load imbalance (max/mean): "
           f"{float(bs['imbalance']):.3f} -> "
           f"{float(bs['imbalance_after_compact']):.3f} after compaction")
+    if args.plan == "sharded":
+        asg = pre.plan.last_assignment
+        print(f"shards={args.shards} redeliveries={pre.plan.redeliveries}")
+        if asg is not None:
+            st = asg.stats()
+            print(f"last-round survivor re-shard: "
+                  f"{st['loads_before'].tolist()} -> "
+                  f"{st['loads_after'].tolist()} "
+                  f"(max/min {st['max_min_before']:.2f} -> "
+                  f"{st['max_min_after']:.2f}, moved {st['moved']})")
     return tot_kept
 
 

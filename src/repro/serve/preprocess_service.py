@@ -6,6 +6,11 @@ serving analogue of the paper's slave pull queue).
 Each request is one stereo long chunk; its result is the per-final-chunk
 keep mask plus the cleaned surviving chunks — what a downstream species
 classifier or archive-compaction consumer needs.
+
+Extra keyword arguments are forwarded to the execution plan, so
+`PreprocessService(cfg, plan="sharded", shards=4)` serves each pumped
+batch through the multi-shard path (rows split across shards, survivors
+re-balanced before MMSE) without the service knowing anything about it.
 """
 from __future__ import annotations
 
@@ -19,11 +24,11 @@ from repro.distributed.sharding import NULL_RULES
 
 class PreprocessService:
     def __init__(self, cfg, rules=NULL_RULES, plan="two_phase",
-                 batch_long_chunks=4, pad_multiple=1):
+                 batch_long_chunks=4, pad_multiple=1, **plan_kwargs):
         self.cfg = cfg
         self.batch = batch_long_chunks
         self.pre = Preprocessor(cfg, rules, plan=plan,
-                                pad_multiple=pad_multiple)
+                                pad_multiple=pad_multiple, **plan_kwargs)
         self._queue = collections.deque()
         self._results = {}
         self._next_id = 0

@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.ckpt import checkpoint as ckpt
+from repro.data.queue import SettableClock as FakeClock
 from repro.data.queue import WorkQueue
 from repro.ft.failure import (HeartbeatMonitor, StragglerDetector, plan_mesh)
 
@@ -60,13 +61,6 @@ def test_ckpt_restore_structure_mismatch(tmp_path):
 
 
 # ------------------------------------------------------------------ queue/ft
-class FakeClock:
-    def __init__(self):
-        self.t = 0.0
-
-    def __call__(self):
-        return self.t
-
 
 def test_work_queue_lease_complete_expire():
     clock = FakeClock()
@@ -99,6 +93,35 @@ def test_work_queue_fail_worker_and_resume():
             break
         remaining.extend(got)
     assert sorted(remaining) == [0, 1, 4, 5]   # done items never re-issued
+
+
+def test_work_queue_late_complete_not_redelivered():
+    """Regression: a lease that expires and is reaped (back into pending)
+    and is THEN completed late by its original worker must never be
+    re-delivered by a later lease() — the stale pending copy is dropped."""
+    clock = FakeClock()
+    q = WorkQueue(2, lease_timeout_s=5.0, clock=clock)
+    assert q.lease("w1", 1) == [0]
+    clock.t = 10.0                     # w1's lease expires
+    q.state()                          # a checkpoint tick reaps it: 0 is
+    assert q.redeliveries == 1         # back in pending...
+    assert q.complete([0]) == [0]      # ...then w1 finishes late
+    assert q.lease("w2", 2) == [1]     # 0 must NOT come back
+    assert q.complete([1]) == [1]
+    assert q.complete([1]) == []       # completion is exactly-once
+    assert q.finished
+
+
+def test_crash_injector_fuse_and_revive():
+    from repro.ft.failure import CrashInjector
+    inj = CrashInjector()
+    inj.kill(0, after_items=2)
+    assert inj.on_pull(0) and inj.on_pull(0)     # two items pass
+    assert not inj.on_pull(0)                    # dies holding the third
+    assert not inj.alive(0) and inj.crashed == frozenset({0})
+    assert inj.alive(1) and inj.on_pull(1)       # other shards unaffected
+    inj.revive(0)
+    assert inj.alive(0) and inj.on_pull(0)
 
 
 def test_heartbeat_monitor():

@@ -77,18 +77,15 @@ def test_two_phase_matches_fused_on_survivors(stream):
     assert two.n_kept == keep.sum()
 
 
-def test_deprecated_shims_match_facade(stream):
-    """The seed entry points survive as thin shims over the stage graph."""
-    chunks, _, _ = stream
-    x = jnp.asarray(chunks[:2])
-    with pytest.warns(DeprecationWarning):
-        from repro.core.pipeline import preprocess_two_phase
-        cleaned, det, n = preprocess_two_phase(cfg, x, pad_multiple=1)
-    res = Preprocessor(cfg, plan="two_phase", pad_multiple=1)(x)
-    assert n == res.n_kept
-    np.testing.assert_array_equal(np.asarray(det.keep),
-                                  np.asarray(res.det.keep))
-    np.testing.assert_allclose(cleaned, res.cleaned, rtol=1e-5)
+def test_seed_shims_are_gone():
+    """The deprecated seed entry points were deleted once nothing imported
+    them (ROADMAP); only the graph re-exports remain."""
+    import repro.core.pipeline as pipeline
+    for name in ("detection_phase", "mmse_phase", "preprocess_fused",
+                 "preprocess_two_phase"):
+        assert not hasattr(pipeline, name)
+    assert pipeline.PipelineGraph is not None
+    assert pipeline.PipelineOutput is not None
 
 
 def test_mmse_reduces_background_noise_keeps_signal():
