@@ -19,7 +19,10 @@ def smoke():
     executor regressions fail fast (scripts/verify.sh runs this). Then the
     sharded fault-tolerance gate: 2 simulated shards with a forced lease
     expiry AND a mid-stream worker crash must finish with redeliveries >= 1
-    and zero lost or duplicated chunks."""
+    and zero lost or duplicated chunks. Then the cache gate: the same tiny
+    stream twice through CachedPlan over a fresh store — the second pass
+    must be >= 90% hits with survivor masks bit-identical to the uncached
+    reference."""
     import numpy as np
     from repro.configs import SERF_AUDIO as cfg
     from repro.core.plans import PLANS, Preprocessor
@@ -58,7 +61,13 @@ def smoke():
     except Exception:
         failures.append("sharded-ft")
         traceback.print_exc()
-    print(f"\nsmoke: {len(PLANS) + 1 - len(failures)}/{len(PLANS) + 1} "
+    try:
+        _cache_smoke(np, cfg, Preprocessor, stream, ref)
+    except Exception:
+        failures.append("cache")
+        traceback.print_exc()
+    n_gates = len(PLANS) + 2
+    print(f"\nsmoke: {n_gates - len(failures)}/{n_gates} "
           f"gates OK" + (f"; FAILED: {failures}" if failures else ""))
     raise SystemExit(1 if failures else 0)
 
@@ -101,6 +110,35 @@ def _ft_smoke(np, cfg, Preprocessor):
           f"in {time.time() - t0:.1f}s")
 
 
+def _cache_smoke(np, cfg, Preprocessor, stream, ref):
+    """CachedPlan gate: the same tiny stream twice over a fresh store —
+    pass 2 must be >= 90% cache hits and its survivor masks / cleaned
+    audio must match the uncached plan-equivalence reference."""
+    import shutil
+    import tempfile
+
+    t0 = time.time()
+    store_dir = tempfile.mkdtemp(prefix="smoke_cache_")
+    try:
+        for pass_no in (1, 2):
+            pre = Preprocessor(cfg, plan="cached", inner="two_phase",
+                               store=store_dir, pad_multiple=1)
+            results = sorted(pre.run(stream), key=lambda r: r.wid)
+            keep = np.concatenate([np.asarray(r.det.keep) for r in results])
+            cleaned = np.concatenate([r.cleaned for r in results])
+            np.testing.assert_array_equal(keep, ref[0])
+            np.testing.assert_allclose(cleaned, ref[1],
+                                       rtol=1e-4, atol=1e-5)
+        st = pre.plan.stats
+        assert st.hit_rate >= 0.9, \
+            f"warm pass hit rate {st.hit_rate:.0%} < 90%"
+        print(f"plan cache      OK: warm pass {st.hits}/{st.hits + st.misses}"
+              f" hits, masks bit-identical to uncached, "
+              f"in {time.time() - t0:.1f}s")
+    finally:
+        shutil.rmtree(store_dir, ignore_errors=True)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -117,7 +155,7 @@ def main():
                             bench_detector_accuracy, bench_split_accuracy,
                             bench_comm, bench_config_search, bench_scaling,
                             bench_load_balance, bench_utilization,
-                            bench_early_exit)
+                            bench_early_exit, bench_cache)
     steps = [
         ("Table 1 / Fig 1: stage times",
          lambda: bench_stage_times.run(minutes=minutes)),
@@ -138,6 +176,8 @@ def main():
          lambda: bench_utilization.run(hours=hours)),
         ("Headline: early-exit economy (on-device)",
          lambda: bench_early_exit.run(minutes=4.0)),
+        ("Store: cold/warm/partial-overlap cache economics",
+         lambda: bench_cache.run(minutes=8.0 if not args.full else 32.0)),
     ]
     failures = []
     for name, fn in steps:

@@ -1,6 +1,10 @@
 """Fault-tolerance walkthrough: train, 'lose' capacity, restore the
 checkpoint onto a smaller mesh (restore-time resharding), keep training with
-the exact data cursor — no sample loss or duplication.
+the exact data cursor — no sample loss or duplication. Phase 4 shows the
+same exactly-once story for the PREPROCESSING stream: a `--store`d cached
+run is killed mid-stream and relaunched with `resume=True` — the
+`repro.store.RunJournal` skips exactly what was already emitted, and the
+`ChunkStore` turns the dead run's unemitted-but-computed work into hits.
 
   PYTHONPATH=src python examples/elastic_restart.py
 """
@@ -86,6 +90,27 @@ def main():
           f"work-id {meta['cursor_done']}, trained 5 more steps "
           f"(loss {loss2:.3f})")
     print("elastic restart complete: no sample was lost or duplicated.")
+
+    # phase 4: kill-and-resume for the preprocessing stream
+    from repro.configs import SERF_AUDIO
+    from repro.core.plans import Preprocessor
+    from repro.data.loader import audio_batch_maker
+
+    store = tempfile.mkdtemp(prefix="elastic_store_")
+    make = audio_batch_maker(seed=0, batch_long_chunks=1)
+    stream = [(w, make(w)) for w in range(4)]
+    pre = Preprocessor(SERF_AUDIO, plan="cached", store=store, journal=True)
+    gen = pre.run(stream)
+    emitted = [next(gen).wid, next(gen).wid]
+    gen.close()                        # the preprocessing run 'dies' here
+    print(f"phase 4: cached preprocess run killed after emitting "
+          f"chunks {emitted}")
+    pre2 = Preprocessor(SERF_AUDIO, plan="cached", store=store,
+                        journal=True, resume=True)
+    rest = [r.wid for r in pre2.run(stream)]
+    assert sorted(emitted + rest) == list(range(4))
+    print(f"  --resume emitted {rest} (store: {pre2.plan.stats}): "
+          f"each chunk exactly once across the kill.")
 
 
 if __name__ == "__main__":

@@ -5,7 +5,10 @@
 #      execution plan (survivor sets must agree bit-for-bit), PLUS the
 #      sharded fault-tolerance gate — ShardedPlan over 2 simulated shards
 #      with a forced lease expiry and a mid-stream worker crash must
-#      finish with redeliveries >= 1 and zero lost/duplicated chunks
+#      finish with redeliveries >= 1 and zero lost/duplicated chunks —
+#      PLUS the cache gate — the same tiny stream twice through
+#      CachedPlan over a fresh store: the second pass must be >= 90%
+#      cache hits with survivor masks bit-identical to the uncached plan
 #
 #   bash scripts/verify.sh [extra pytest args]
 set -euo pipefail

@@ -39,6 +39,11 @@ class AudioPipelineConfig:
     # silence snr ~0.32 [0.30,0.36], bird ~0.92 [0.89,0.95]
     silence_snr_threshold: float = 0.45
     silence_snr_threshold_hi: float = 0.60
+    # spectral-flux energy detection (Stowell-style onset strength), the
+    # drop-in alternative to SNR silence detection ('detect_flux' stage):
+    # calibrated on the synthetic labelled set — active chunks (bird,
+    # cicada) p5 >= 2.1, inactive (silence, steady rain) p95 <= 0.98
+    flux_threshold: float = 1.5
     # rain detection rule constants (C4.5-derived structure; constants fit on
     # the synthetic labelled set since SERF audio is not redistributable):
     # rain psd ~1.87 / flatness ~0.33 / snr ~0.35 vs bird 1.1 / 0.19 / 0.92

@@ -34,6 +34,16 @@ def detect_silence(idx, cfg, threshold=None):
     return idx["snr"] < thr
 
 
+def detect_no_activity(idx, cfg, threshold=None):
+    """Spectral-flux energy detection (Stowell-style): a chunk with no
+    onset — peak rectified flux below threshold — holds no transient
+    vocalisation and can be removed. Complements `detect_silence`: flux
+    also rejects loud-but-flat chunks whose envelope SNR sneaks over the
+    silence threshold."""
+    thr = cfg.flux_threshold if threshold is None else threshold
+    return idx["flux"] < thr
+
+
 def classify_chunks(power, cfg):
     """Full detector pass over chunk power spectra: (B,F,K) -> dict of (B,)
     masks + the index vector (for benchmarks)."""

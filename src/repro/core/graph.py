@@ -318,6 +318,30 @@ class DetectSilence(Stage):
 
 
 @register
+class DetectFlux(Stage):
+    """Spectral-flux energy detector (Stowell-style): chunks whose peak
+    half-wave-rectified flux stays under `cfg.flux_threshold` carry no
+    transient vocalisation and are marked for removal (folded into the
+    silence mask, gated on ~rain like every removal detector). A drop-in
+    alternative — or complement — to 'detect_silence', selectable purely
+    via `cfg.stages` / the `stages=` override; no executor knows it
+    exists."""
+    name = "detect_flux"
+
+    def check(self, vs):
+        self._need(vs, "power")
+        return replace(vs, has=vs.has | {"silence"})
+
+    def apply(self, state, rules):
+        idle = D.detect_no_activity(_indices(state, self.cfg), self.cfg)
+        if "rain" in state:
+            idle = idle & ~state["rain"]
+        prev = state.get("silence")
+        state["silence"] = idle if prev is None else (prev | idle)
+        return state
+
+
+@register
 class RemovalPoint(Stage):
     """Marker: host compaction may occur HERE. Freezes keep = ~rain &
     ~silence; two-phase plans cut the graph at the first marker. Past a

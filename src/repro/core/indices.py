@@ -78,6 +78,17 @@ def temporal_persistence(power, lo_hz, hi_hz, window=256, rate_hz=22_050,
     return jnp.mean((be / te) > frac, axis=1)
 
 
+def spectral_flux(power):
+    """Onset strength via half-wave-rectified spectral flux (Stowell-style
+    energy detection): per frame, sum the positive per-bin power rises from
+    the previous frame; report the chunk's PEAK flux relative to its mean
+    envelope energy. Transient bird calls spike it (>2); silence, steady
+    rain, and sustained choruses keep near-flat spectra (<1)."""
+    rise = jnp.maximum(power[:, 1:] - power[:, :-1], 0.0)   # (B, F-1, K)
+    peak = jnp.max(jnp.sum(rise, axis=-1), axis=1)
+    return peak / (jnp.mean(frame_energy(power), axis=1) + EPS)
+
+
 def all_indices(power, cfg):
     """The index vector used by the rule classifiers (and exported for the
     benchmark reproducing the paper's classifier-feature table)."""
@@ -86,6 +97,7 @@ def all_indices(power, cfg):
     return {
         "psd": psd_mean(power),
         "snr": snr_est(power),
+        "flux": spectral_flux(power),
         "flatness": spectral_flatness(power),
         "rain_band": band_energy_ratio(power, *cfg.rain_low_band_hz,
                                        cfg.stft_window, cfg.target_rate_hz),

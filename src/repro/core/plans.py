@@ -1,7 +1,7 @@
 """Execution plans: HOW a validated `PipelineGraph` runs on a batch stream.
 
 The graph fixes WHAT computes (stage order, removal points); a plan picks
-the execution strategy. Four plans, and when to pick each:
+the execution strategy. Five plans, and when to pick each:
 
   * `FusedPlan`     — one jit straight through; removed chunks are masked
                       but still computed (the paper's no-early-exit
@@ -30,6 +30,19 @@ the execution strategy. Four plans, and when to pick each:
                       mid-stream resumes from queue state with no lost or
                       duplicated chunks. Pick for multi-host / multi-worker
                       runs, or whenever fault tolerance matters.
+  * `CachedPlan`    — content-addressed persistence around ANY inner plan
+                      (including the sharded one): the `repro.store`
+                      ChunkStore is consulted before dispatch, only misses
+                      run through the inner plan, cached survivors merge
+                      back in stream order, fresh results are written after.
+                      With a `RunJournal` a killed `--store`d run relaunched
+                      with `--resume` emits each chunk exactly once —
+                      PR 2's worker-crash guarantee extended across PROCESS
+                      restarts. Pick for rolling archives where runs overlap
+                      yesterday's data (re-runs become lookups), for config
+                      re-runs, and for any stream that must survive kills.
+                      Without a store it degrades to a transparent
+                      pass-through of its inner plan.
 
 All plans sit behind the `Preprocessor` facade, and all jitted phases live
 in one keyed LRU `CompileCache`. Keys are *value* fingerprints — config,
@@ -44,6 +57,7 @@ from __future__ import annotations
 
 import collections
 import operator
+import os
 import time
 from dataclasses import dataclass, field, replace
 
@@ -55,8 +69,10 @@ from repro.core import scheduler as SCHED
 from repro.core.graph import (GraphValidationError, PipelineGraph,
                               PipelineOutput)
 from repro.data.loader import ShardedLoader, make_shard_pool
+from repro.data.queue import WorkQueue
 from repro.distributed.sharding import NULL_RULES
 from repro.kernels import backend
+from repro.store import ChunkStore, RunJournal, content_key
 
 
 class CompileCache:
@@ -258,6 +274,7 @@ class ShardedPlan(TwoPhasePlan):
     CompileCache keyed by each shard's value fingerprint.
     """
     name = "sharded"
+    accepts_rules_pool = True
 
     def __init__(self, graph, rules=NULL_RULES, pad_multiple=1, shards=2,
                  lease_items=1, injector=None, monitor=None):
@@ -456,6 +473,237 @@ class ShardedPlan(TwoPhasePlan):
                 labels=labels, src_bytes=nbytes)
 
 
+class _SizedIter:
+    """One-shot iterable with a length hint: lets CachedPlan hand its miss
+    stream to a sharded inner lazily (ShardedPlan sizes its queue from the
+    hint and draws items as leases demand) without pinning every raw batch
+    in a list."""
+
+    def __init__(self, it, n):
+        self._it, self._n = iter(it), n
+
+    def __iter__(self):
+        return self._it
+
+    def __length_hint__(self):
+        return self._n
+
+
+class CachedPlan(ExecutionPlan):
+    """Content-addressed caching + resumability around any inner plan.
+
+    Execution per stream: every batch is keyed by content hash of (raw
+    chunk bytes, graph fingerprint, kernel backend mode) and looked up in
+    the `ChunkStore` BEFORE any dispatch; only misses flow through the
+    inner plan (one sub-stream, so a sharded inner keeps its leased-queue
+    batching); cached survivors merge back in stream order; fresh results
+    are written to the store as the inner plan emits them. The cache key
+    deliberately omits sharding rules — sharding moves work, never values
+    (plan equivalence is bit-exact on masks), so runs under different
+    shard counts share entries.
+
+    Resumability: with a `RunJournal`, the plan snapshots its emission
+    queue after every yielded result; constructing with `resume=True`
+    restores that snapshot and skips exactly the work the dead process
+    already emitted — each chunk id is emitted once across the kill.
+    Results the dead run computed but never emitted come back as store
+    hits, so the resumed run pays recomputation only for truly in-flight
+    work.
+
+    `store=None` (the default) degrades to a transparent pass-through, so
+    'cached' is always safe to select. Cached `det` records carry masks and
+    stats but a zero-filled `wave5` — the pre-denoise waveform is an
+    intermediate no downstream consumer reads, and persisting it would
+    dwarf the survivors it exists to produce.
+    """
+    name = "cached"
+    accepts_rules_pool = True
+
+    def __init__(self, graph, rules=NULL_RULES, pad_multiple=1,
+                 inner="two_phase", store=None, journal=None, resume=False,
+                 **inner_kwargs):
+        inner_cls = PLANS[inner] if isinstance(inner, str) else inner
+        if isinstance(rules, (list, tuple)) and not (
+                isinstance(inner_cls, type)
+                and getattr(inner_cls, "accepts_rules_pool", False)):
+            raise ValueError(
+                "a per-shard rules list is only valid with the sharded "
+                f"plan as inner, not {getattr(inner_cls, 'name', inner_cls)!r}")
+        facade_rules = rules[0] \
+            if isinstance(rules, (list, tuple)) and rules else rules
+        super().__init__(graph, facade_rules, pad_multiple)
+        self.inner = inner_cls(graph, rules, pad_multiple, **inner_kwargs)
+        if isinstance(store, (str, os.PathLike)):
+            # a cache should self-heal: a bit-rotted entry is evicted and
+            # recomputed, not fatal on every future run at the same batch.
+            # Pass a ChunkStore instance for archival strictness.
+            store = ChunkStore(store, evict_corrupt=True)
+        self.store = store
+        if journal is True:
+            if store is None:
+                raise ValueError(
+                    "journal=True derives the journal path from the store "
+                    "directory — pass a store, or an explicit journal")
+            journal = os.path.join(store.directory, "journal")
+        if isinstance(journal, (str, os.PathLike)):
+            journal = RunJournal(journal)
+        self.journal = journal
+        self.resume = bool(resume)
+        if self.resume and self.journal is None:
+            raise ValueError("resume=True needs a journal")
+
+    @property
+    def stats(self):
+        """The store's hit/miss/bytes accounting (None when uncached)."""
+        return self.store.stats if self.store is not None else None
+
+    # -- BatchResult <-> store entry ----------------------------------------
+    def _key(self, chunks_np):
+        return content_key(chunks_np, self.graph.fingerprint,
+                           backend.get_mode())
+
+    def _entry(self, res: BatchResult):
+        det = res.det
+        arrays = {
+            "cleaned": np.asarray(res.cleaned, np.float32),
+            "keep": np.asarray(det.keep), "rain": np.asarray(det.rain),
+            "silence": np.asarray(det.silence),
+            "cicada15": np.asarray(det.cicada15),
+        }
+        stats = {k: (int(v) if k == "n_chunks5" else float(v))
+                 for k, v in det.stats.items()}
+        meta = {"stats": stats, "n_kept": int(res.n_kept),
+                "src_bytes": int(res.src_bytes),
+                "wave_width": int(np.asarray(det.wave5).shape[-1])}
+        return arrays, meta
+
+    def _result(self, arrays, meta, wid, extra) -> BatchResult:
+        keep = arrays["keep"]
+        wave5 = np.zeros((keep.shape[0], int(meta["wave_width"])),
+                         np.float32)
+        det = PipelineOutput(wave5=wave5, keep=keep, rain=arrays["rain"],
+                             silence=arrays["silence"],
+                             cicada15=arrays["cicada15"],
+                             stats=dict(meta["stats"]))
+        return BatchResult(cleaned=arrays["cleaned"], det=det,
+                           n_kept=int(meta["n_kept"]), wid=wid,
+                           labels=extra, src_bytes=int(meta["src_bytes"]))
+
+    # -- single batch (the warm-cache serving path) -------------------------
+    def __call__(self, audio) -> BatchResult:
+        if self.store is None:
+            return self.inner(audio)
+        x = np.asarray(audio, np.float32)
+        key = self._key(x)
+        hit = self.store.get(key, src_bytes=x.nbytes)
+        if hit is not None:
+            return self._result(*hit, wid=None, extra=None)
+        res = self.inner(x)
+        self.store.put(key, *self._entry(res))
+        return res
+
+    # -- streams ------------------------------------------------------------
+    def run(self, batches):
+        """Emits BatchResults in STREAM order (cached survivors merged back
+        where they belong). Emission follows ShardedPlan's completion-gated
+        convention: the queue completes and the journal records IMMEDIATELY
+        BEFORE each yield, so at the plan boundary every chunk is emitted
+        exactly once across a kill + resume — an abandoned generator resumes
+        from precisely the next unemitted item. (The chunk handed over at
+        the instant of a hard process kill is the consumer's to recover, as
+        with any exactly-once hand-off.)
+
+        Memory: like ShardedPlan, sized streams (lists, loaders with
+        __len__) are drawn lazily — hits in the stream-order prefix are
+        emitted DURING the probe, raw chunks are retained only for misses,
+        and each miss's bytes are released as the inner plan draws them —
+        while unsized generators are materialised up front to learn the
+        stream length (the journal and resume guard need it)."""
+        if isinstance(batches, (list, tuple)) and batches and \
+                all(isinstance(b, ShardedLoader) for b in batches):
+            raise ValueError(
+                "CachedPlan must see chunk content before dispatch — feed "
+                "it the plain batch stream; a sharded inner builds its "
+                "leased shard pool internally from the misses")
+
+        n = operator.length_hint(batches, -1)
+        it = _iter_batches(batches)
+        if n < 0:
+            drained = list(it)
+            n, it = len(drained), iter(drained)
+
+        done, want_key0 = set(), None
+        if self.journal is not None and self.resume:
+            rec_meta = self.journal.load()
+            if rec_meta is not None:
+                rec_n = int(rec_meta["queue"]["n_items"])
+                if rec_n != n:
+                    raise ValueError(
+                        f"journal records a {rec_n}-item stream; the "
+                        f"resume stream has {n} items — refusing to mix "
+                        f"runs")
+                done = set(rec_meta["queue"]["done"])
+                want_key0 = rec_meta.get("stream_key0")
+        queue = WorkQueue.from_state({"n_items": n, "done": sorted(done)})
+        order = [p for p in range(n) if p not in done]
+        emit_idx = 0
+        key0 = None                       # stream identity: first batch key
+        results: dict[int, BatchResult] = {}
+        misses = []                       # [pos, key, wid, chunks, extra]
+
+        def emit_ready():
+            """Completion-gated hand-off of the ready stream-order prefix."""
+            nonlocal emit_idx
+            while emit_idx < len(order) and order[emit_idx] in results:
+                pos = order[emit_idx]
+                emit_idx += 1
+                queue.complete([pos])
+                if self.journal is not None:
+                    self.journal.record(queue, meta={"stream_key0": key0})
+                yield results.pop(pos)
+
+        for pos, (wid, chunks, extra) in enumerate(it):
+            probe = pos not in done and self.store is not None
+            if probe or (pos == 0 and self.journal is not None):
+                x = np.asarray(chunks, np.float32)
+                key = self._key(x)
+                if pos == 0:
+                    key0 = key
+                    if want_key0 is not None and want_key0 != key0:
+                        raise ValueError(
+                            "journal records a stream with different "
+                            "content (first-batch key mismatch) — "
+                            "refusing to mix runs")
+            if pos in done:
+                continue                  # the killed run already emitted it
+            if not probe:                 # uncached: everything is a miss
+                misses.append([pos, None, wid, chunks, extra])
+                continue
+            hit = self.store.get(key, src_bytes=x.nbytes)
+            if hit is not None:
+                results[pos] = self._result(*hit, wid=wid, extra=extra)
+                yield from emit_ready()   # warm prefixes flow immediately
+            else:
+                misses.append([pos, key, wid, x, extra])
+
+        if misses:
+            def miss_stream():
+                for i, m in enumerate(misses):
+                    item = (i, (m[3], m[4]))
+                    m[3] = None           # the inner plan owns the bytes now
+                    yield item
+
+            for res in self.inner.run(_SizedIter(miss_stream(),
+                                                 len(misses))):
+                pos, key, wid, _, extra = misses[res.wid]
+                if self.store is not None:
+                    self.store.put(key, *self._entry(res))
+                results[pos] = replace(res, wid=wid, labels=extra)
+                yield from emit_ready()
+        yield from emit_ready()
+        assert emit_idx == len(order), "inner plan dropped work ids"
+
+
 def _merge_outputs(outs):
     """Concatenate per-shard PipelineOutputs (row order preserved) with
     chunk-count-weighted stats — the batch looks as if one shard detected
@@ -475,7 +723,7 @@ def _merge_outputs(outs):
 
 
 PLANS = {p.name: p for p in (FusedPlan, TwoPhasePlan, StreamingPlan,
-                             ShardedPlan)}
+                             ShardedPlan, CachedPlan)}
 
 
 class Preprocessor:
@@ -504,10 +752,11 @@ class Preprocessor:
         plan_cls = PLANS[plan] if isinstance(plan, str) else plan
         if isinstance(rules, (list, tuple)) and not (
                 isinstance(plan_cls, type)
-                and issubclass(plan_cls, ShardedPlan)):
+                and getattr(plan_cls, "accepts_rules_pool", False)):
             raise ValueError(
                 "a per-shard rules list is only valid with the sharded "
-                f"plan, not {getattr(plan_cls, 'name', plan_cls)!r}")
+                "plan (or a cached wrapper around it), not "
+                f"{getattr(plan_cls, 'name', plan_cls)!r}")
         self.plan = plan_cls(self.graph, rules, pad_multiple, **plan_kwargs)
 
     def __call__(self, audio) -> BatchResult:

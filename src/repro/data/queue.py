@@ -115,11 +115,19 @@ class WorkQueue:
 
     # -- checkpoint ---------------------------------------------------------
     def state(self):
+        """Serializable snapshot: done ids plus the ids still leased at
+        snapshot time. Leased ids are recorded so a journal shows what was
+        in flight when the process died; on restore they re-enter pending
+        (their lease holder died with the process)."""
         self._reap_expired()
-        return {"n_items": self.n_items, "done": sorted(self._done)}
+        return {"n_items": self.n_items, "done": sorted(self._done),
+                "leased": sorted(self._leases)}
 
     @classmethod
     def from_state(cls, state, **kw):
+        """Rebuild from a snapshot: everything not done — including ids the
+        snapshot recorded as leased — re-enters pending, so outstanding
+        leases are redelivered, never lost."""
         q = cls(state["n_items"], **kw)
         done = set(state["done"])
         q._done = done

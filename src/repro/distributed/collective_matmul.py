@@ -34,7 +34,10 @@ def ag_matmul(x, w, mesh, axis="model"):
         # x_blk: (M/n, K); w_blk: (K, N/n)
         idx = jax.lax.axis_index(axis)
         M_blk = x_blk.shape[0]
-        out = jax.lax.pvary(            # mark varying over the ring axis
+        # pvary marks the accumulator varying over the ring axis; older jax
+        # has no pvary and no varying-axes check either, so identity is safe
+        pvary = getattr(jax.lax, "pvary", lambda v, axes: v)
+        out = pvary(
             jnp.zeros((M_blk * n, w_blk.shape[1]), x_blk.dtype), (axis,))
 
         def body(i, carry):

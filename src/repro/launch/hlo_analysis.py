@@ -43,7 +43,12 @@ _COLL_RE = re.compile(
     r"collective-permute)(?:-start)?\(")
 _GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-_DOT_RE = re.compile(r"\bdot\(\s*%([\w.\-]+),\s*%([\w.\-]+)")
+# operand shapes are printed inline by some XLA versions
+# ("dot(f32[4,128]{1,0} %a, ...)") and omitted by others ("dot(%a, ...)")
+_OPT_SHAPE = r"(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?\s+)?"
+_DOT_RE = re.compile(
+    r"\bdot\(\s*" + _OPT_SHAPE + r"%([\w.\-]+),\s*"
+    + _OPT_SHAPE + r"%([\w.\-]+)")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _OPERANDS_RE = re.compile(r"%([\w.\-]+)")
 

@@ -3,12 +3,21 @@ chunks through the stage-graph pipeline under a chosen execution plan.
 
   PYTHONPATH=src python -m repro.launch.preprocess --minutes 8 --plan streaming
   PYTHONPATH=src python -m repro.launch.preprocess --plan sharded --shards 4
+  PYTHONPATH=src python -m repro.launch.preprocess --plan sharded --store /data/store
+  PYTHONPATH=src python -m repro.launch.preprocess --store /data/store --resume
 
 Reports per-stage removal fractions and throughput (the paper's headline
 metric: MB/s of source audio preprocessed; their 4-VM x 4-core figure was
 16.4-16.5 MB/s). Per-batch stats are aggregated weighted by chunk count, so
 uneven batches don't skew the fractions. The sharded plan additionally
 reports queue redeliveries and the last round's survivor re-shard loads.
+
+`--plan` choices come straight from the `PLANS` registry, so new plans
+appear here without touching this driver. `--store DIR` wraps the chosen
+plan in `CachedPlan` over a content-addressed `repro.store.ChunkStore`
+(re-runs over overlapping data become lookups) plus a `RunJournal`;
+`--resume` relaunches a killed `--store` run mid-stream with each chunk
+emitted exactly once.
 """
 from __future__ import annotations
 
@@ -31,31 +40,53 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--minutes", type=float, default=4.0)
     ap.add_argument("--batch-long-chunks", type=int, default=4)
+    # the registry IS the choice list: a newly registered plan (e.g.
+    # 'cached') shows up here with zero driver edits
     ap.add_argument("--plan", "--mode", dest="plan", default="two_phase",
                     choices=sorted(PLANS))
     ap.add_argument("--shards", type=int, default=2,
                     help="simulated shard count for --plan sharded")
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="content-addressed result store: wraps the chosen "
+                         "plan in CachedPlan + a resume journal")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume a killed --store run from its journal "
+                         "(exactly-once emission across the restart)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.resume and not args.store:
+        ap.error("--resume requires --store")
 
     cfg = SERF_AUDIO
     n_batches = max(1, int(round(args.minutes / args.batch_long_chunks)))
     mesh = make_local_mesh()
     pad = max(1, len(jax.devices()))
-    if args.plan == "sharded":
+    sharded = args.plan == "sharded"
+    rules = pool_rules(args.shards, mesh) if sharded else ShardingRules(mesh)
+    plan_kwargs = {"shards": args.shards} if sharded else {}
+    if args.store:
+        # CachedPlan must see chunk content before dispatch, so even a
+        # sharded inner is fed the plain stream (it builds its leased pool
+        # internally); hits never reach the inner plan at all
+        inner = "two_phase" if args.plan == "cached" else args.plan
+        plan, plan_kwargs = "cached", {
+            "inner": inner, "store": args.store, "journal": True,
+            "resume": args.resume, **plan_kwargs}
+        loader = AudioChunkLoader(seed=args.seed, n_batches=n_batches,
+                                  batch_long_chunks=args.batch_long_chunks)
+    elif sharded:
         # per-shard loaders over ONE shared leased queue; shards share this
         # process's mesh, so their compiles dedup in the CompileCache
+        plan = "sharded"
         loader = audio_shard_pool(
             seed=args.seed, n_batches=n_batches, n_shards=args.shards,
             batch_long_chunks=args.batch_long_chunks)
-        pre = Preprocessor(cfg, pool_rules(args.shards, mesh),
-                           plan="sharded", pad_multiple=pad,
-                           shards=args.shards)
     else:
+        plan = args.plan
         loader = AudioChunkLoader(seed=args.seed, n_batches=n_batches,
                                   batch_long_chunks=args.batch_long_chunks)
-        pre = Preprocessor(cfg, ShardingRules(mesh), plan=args.plan,
-                           pad_multiple=pad)
+    pre = Preprocessor(cfg, rules, plan=plan, pad_multiple=pad,
+                       **plan_kwargs)
 
     tot_bytes = tot_kept = tot_chunks = 0
     agg = {k: 0.0 for k in _FRAC_KEYS}
@@ -70,8 +101,15 @@ def main(argv=None):
         tot_chunks += int(w)
         last_keep = res.det.keep
     dt = time.time() - t0
+    cached = pre.plan if plan == "cached" else None
+    exec_plan = cached.inner if cached is not None else pre.plan
     if tot_chunks == 0:
-        print("empty stream: the loader yielded no batches — nothing to do")
+        if cached is not None and args.resume:
+            print("nothing left to emit: the journal shows every chunk of "
+                  "this stream was already emitted before the kill")
+        else:
+            print("empty stream: the loader yielded no batches — "
+                  "nothing to do")
         return 0
     frac = {k: agg[k] / tot_chunks for k in _FRAC_KEYS}
     print(f"plan={args.plan}  {tot_bytes / 2**20:.0f} MB source audio "
@@ -84,9 +122,9 @@ def main(argv=None):
     print(f"survivor load imbalance (max/mean): "
           f"{float(bs['imbalance']):.3f} -> "
           f"{float(bs['imbalance_after_compact']):.3f} after compaction")
-    if args.plan == "sharded":
-        asg = pre.plan.last_assignment
-        print(f"shards={args.shards} redeliveries={pre.plan.redeliveries}")
+    if exec_plan.name == "sharded":
+        asg = exec_plan.last_assignment
+        print(f"shards={args.shards} redeliveries={exec_plan.redeliveries}")
         if asg is not None:
             st = asg.stats()
             print(f"last-round survivor re-shard: "
@@ -94,6 +132,8 @@ def main(argv=None):
                   f"{st['loads_after'].tolist()} "
                   f"(max/min {st['max_min_before']:.2f} -> "
                   f"{st['max_min_after']:.2f}, moved {st['moved']})")
+    if cached is not None and cached.stats is not None:
+        print(f"store: {cached.stats}")
     return tot_kept
 
 

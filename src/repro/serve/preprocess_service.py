@@ -11,6 +11,14 @@ Extra keyword arguments are forwarded to the execution plan, so
 `PreprocessService(cfg, plan="sharded", shards=4)` serves each pumped
 batch through the multi-shard path (rows split across shards, survivors
 re-balanced before MMSE) without the service knowing anything about it.
+
+Warm-cache serving rides the same passthrough:
+`PreprocessService(cfg, plan="cached", store=DIR)` consults the
+content-addressed `repro.store.ChunkStore` per pumped batch — a batch
+whose exact bytes were served (or preprocessed offline) before returns
+from the store without touching a device. Batches are keyed as pumped,
+i.e. padded composition included, so recurring request groups hit;
+`cache_stats` reports the hit/miss/bytes-saved ledger.
 """
 from __future__ import annotations
 
@@ -75,3 +83,9 @@ class PreprocessService:
 
     def result(self, rid):
         return self._results.get(rid)
+
+    @property
+    def cache_stats(self):
+        """Store hit/miss accounting when serving through a cached plan
+        (None otherwise)."""
+        return getattr(self.pre.plan, "stats", None)

@@ -1,0 +1,15 @@
+"""Persistence subsystem: content-addressed preprocessing results and
+cross-restart run journals.
+
+The fourth architectural layer under the graph / plan / shard stack: the
+graph fixes WHAT computes, a plan fixes HOW it executes, shards fix WHERE —
+the store fixes what never needs to run again. `ChunkStore` persists
+per-batch preprocessing results keyed by content hash of (raw chunk bytes,
+graph fingerprint, kernel backend mode); `RunJournal` checkpoints work-queue
+state through the `ckpt` layout so a killed stream resumes exactly where it
+died. Both are consumed by `repro.core.plans.CachedPlan`.
+"""
+from repro.store.chunk_store import ChunkStore, StoreStats, content_key
+from repro.store.journal import RunJournal
+
+__all__ = ["ChunkStore", "StoreStats", "content_key", "RunJournal"]

@@ -1,0 +1,199 @@
+"""Content-addressed store for preprocessing results.
+
+Long-running bioacoustic surveys re-preprocess the same recordings every
+time a run restarts or a config re-run touches overlapping data (rolling
+sensor-network archives: most of today's input overlaps yesterday's). The
+store turns those re-runs into lookups: a result is keyed by the content
+hash of (raw chunk bytes, graph fingerprint, kernel backend mode) — the
+same value identity the CompileCache keys compiles on — so a hit is valid
+if and only if the identical bytes would flow through the identical
+computation.
+
+Layout (mirrors ckpt/checkpoint.py):
+
+    <dir>/objects/<key>/
+        manifest.json      {key, meta, leaves: {name: {file, shape,
+                            dtype, crc32}}}
+        <leaf>.npy         raw array bytes
+    <dir>/objects/<key>.tmp-*   while writing (atomic rename on completion)
+
+Writes are tmp-then-rename atomic: a killed writer leaves only a tmp
+directory that never shadows the key, and concurrent writers race benignly
+(first rename wins, the loser discards). Reads verify per-leaf crc32
+against the manifest.
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+import shutil
+import tempfile
+import zlib
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+def content_key(chunks, graph_fingerprint, backend_mode) -> str:
+    """Content hash of one raw chunk batch under one computation identity.
+
+    chunks: the raw (B, C, S) source batch, hashed as float32 bytes;
+    graph_fingerprint: `PipelineGraph.fingerprint` (config + stage names +
+    source geometry — all frozen, repr-stable); backend_mode: the kernel
+    backend mode string. Everything the CompileCache keys on except the
+    sharding rules — sharding moves work, never values, so differently-
+    sharded runs share entries (plan equivalence is bit-exact on masks).
+    """
+    h = hashlib.sha256()
+    h.update(repr(graph_fingerprint).encode())
+    h.update(b"\x00" + str(backend_mode).encode() + b"\x00")
+    arr = np.ascontiguousarray(np.asarray(chunks, np.float32))
+    h.update(str(arr.shape).encode() + b"\x00")
+    h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+@dataclass
+class StoreStats:
+    """Hit/miss/volume accounting for one ChunkStore handle."""
+    hits: int = 0
+    misses: int = 0
+    writes: int = 0
+    dup_writes: int = 0     # put() of a key that already existed
+    corrupt: int = 0        # entries evicted on crc mismatch
+    bytes_saved: int = 0    # source bytes whose preprocessing a hit skipped
+    bytes_written: int = 0  # bytes of result payload persisted
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def as_dict(self):
+        return {"hits": self.hits, "misses": self.misses,
+                "hit_rate": self.hit_rate, "writes": self.writes,
+                "dup_writes": self.dup_writes, "corrupt": self.corrupt,
+                "bytes_saved": self.bytes_saved,
+                "bytes_written": self.bytes_written}
+
+    def __str__(self):
+        return (f"hits={self.hits} misses={self.misses} "
+                f"(hit rate {self.hit_rate:.1%}), "
+                f"{self.bytes_saved / 2**20:.1f} MB source not reprocessed, "
+                f"{self.bytes_written / 2**20:.1f} MB written")
+
+
+class ChunkStore:
+    """Content-addressed result store with atomic writes and verified reads.
+
+    The store is payload-agnostic: `put`/`get` move {name: ndarray} leaf
+    dicts plus a JSON-safe meta dict; `CachedPlan` owns the BatchResult
+    <-> entry conversion. `verify_crc=False` skips integrity checks on
+    read; `evict_corrupt=True` turns a crc mismatch into an eviction + miss
+    (self-healing cache) instead of an IOError (archival strictness).
+    """
+
+    def __init__(self, directory, verify_crc=True, evict_corrupt=False):
+        self.directory = os.fspath(directory)
+        self._objects = os.path.join(self.directory, "objects")
+        os.makedirs(self._objects, exist_ok=True)
+        self.verify_crc = verify_crc
+        self.evict_corrupt = evict_corrupt
+        self.stats = StoreStats()
+
+    def _path(self, key):
+        return os.path.join(self._objects, key)
+
+    # -- write ---------------------------------------------------------------
+    def put(self, key, arrays, meta=None) -> bool:
+        """Persist {name: ndarray} + meta under `key` atomically. Returns
+        False (and writes nothing) when the key already exists — entries
+        are immutable, first write wins."""
+        final = self._path(key)
+        if os.path.isfile(os.path.join(final, "manifest.json")):
+            self.stats.dup_writes += 1
+            return False
+        tmp = tempfile.mkdtemp(prefix=key[:16] + ".tmp-", dir=self._objects)
+        manifest = {"key": key, "meta": meta or {}, "leaves": {}}
+        written = 0
+        for name, arr in arrays.items():
+            arr = np.ascontiguousarray(np.asarray(arr))
+            fname = name + ".npy"
+            fpath = os.path.join(tmp, fname)
+            np.save(fpath, arr, allow_pickle=False)
+            with open(fpath, "rb") as f:
+                crc = zlib.crc32(f.read())
+            manifest["leaves"][name] = {
+                "file": fname, "shape": list(arr.shape),
+                "dtype": str(arr.dtype), "crc32": crc,
+            }
+            written += os.path.getsize(fpath)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        try:
+            os.rename(tmp, final)
+        except OSError:            # lost the race to a concurrent writer
+            shutil.rmtree(tmp, ignore_errors=True)
+            self.stats.dup_writes += 1
+            return False
+        self.stats.writes += 1
+        self.stats.bytes_written += written
+        return True
+
+    # -- read ----------------------------------------------------------------
+    def get(self, key, src_bytes=0):
+        """({name: ndarray}, meta) for a hit, None for a miss. `src_bytes`
+        (the source payload a hit saves reprocessing) feeds bytes_saved.
+        crc mismatches raise IOError, or evict + miss under
+        evict_corrupt."""
+        path = self._path(key)
+        mpath = os.path.join(path, "manifest.json")
+        if not os.path.isfile(mpath):
+            self.stats.misses += 1
+            return None
+        try:
+            with open(mpath) as f:
+                manifest = json.load(f)
+            out = {}
+            for name, ent in manifest["leaves"].items():
+                with open(os.path.join(path, ent["file"]), "rb") as f:
+                    raw = f.read()
+                if self.verify_crc and zlib.crc32(raw) != ent["crc32"]:
+                    raise IOError(
+                        f"chunk store corruption in {key[:16]}…/{name}: "
+                        f"crc mismatch")
+                arr = np.load(io.BytesIO(raw), allow_pickle=False)
+                out[name] = arr.reshape(ent["shape"])
+        except (IOError, ValueError, KeyError):
+            if not self.evict_corrupt:
+                raise
+            self.evict(key)
+            self.stats.corrupt += 1
+            self.stats.misses += 1
+            return None
+        self.stats.hits += 1
+        self.stats.bytes_saved += int(src_bytes)
+        return out, manifest["meta"]
+
+    # -- inventory -----------------------------------------------------------
+    def evict(self, key):
+        shutil.rmtree(self._path(key), ignore_errors=True)
+
+    def keys(self):
+        if not os.path.isdir(self._objects):
+            return []
+        # a crashed writer leaves <key16>.tmp-* holding a manifest — those
+        # are not entries (the rename never happened)
+        return sorted(
+            d for d in os.listdir(self._objects)
+            if ".tmp-" not in d
+            and os.path.isfile(os.path.join(self._objects, d,
+                                            "manifest.json")))
+
+    def __contains__(self, key):
+        return os.path.isfile(os.path.join(self._path(key), "manifest.json"))
+
+    def __len__(self):
+        return len(self.keys())

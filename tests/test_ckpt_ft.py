@@ -112,6 +112,51 @@ def test_work_queue_late_complete_not_redelivered():
     assert q.finished
 
 
+def test_work_queue_state_roundtrip_with_outstanding_leases():
+    """Serialize/restore under a SettableClock with leases still live at
+    snapshot time: leased ids are recorded in the snapshot and re-enter
+    pending on restore (their holder died with the process) — never lost,
+    and done ids never re-issued."""
+    clock = FakeClock()
+    q = WorkQueue(8, lease_timeout_s=30.0, clock=clock)
+    assert q.lease("w1", 3) == [0, 1, 2]
+    q.complete([0])
+    assert q.lease("w2", 2) == [3, 4]
+    q.complete([3])
+    state = q.state()                       # leases on 1, 2, 4 still live
+    assert state["done"] == [0, 3]
+    assert state["leased"] == [1, 2, 4]
+    q2 = WorkQueue.from_state(state, lease_timeout_s=30.0,
+                              clock=FakeClock())
+    got = []
+    while True:
+        ids = q2.lease("w3", 3)
+        if not ids:
+            break
+        got.extend(ids)
+    assert sorted(got) == [1, 2, 4, 5, 6, 7]   # leased ids redelivered once
+    q2.complete(got)
+    assert q2.finished
+
+
+def test_work_queue_state_reaps_expired_before_snapshot():
+    """A lease already past its deadline at snapshot time is reaped INTO
+    pending, not recorded as leased — the snapshot never resurrects a
+    lease the queue itself considers dead."""
+    clock = FakeClock()
+    q = WorkQueue(3, lease_timeout_s=5.0, clock=clock)
+    q.lease("w1", 1)
+    clock.t = 6.0                          # w1's lease expired
+    q.lease("w2", 1)                       # reaps 0, leases it to w2... or 1
+    state = q.state()
+    assert state["done"] == []
+    assert len(state["leased"]) == 1
+    assert q.redeliveries == 1
+    q2 = WorkQueue.from_state(state, clock=FakeClock())
+    remaining = q2.lease("w3", 10)
+    assert sorted(remaining) == [0, 1, 2]
+
+
 def test_crash_injector_fuse_and_revive():
     from repro.ft.failure import CrashInjector
     inj = CrashInjector()

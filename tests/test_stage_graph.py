@@ -62,6 +62,33 @@ def test_graph_validation_rejects_bad_orders(bad, match):
         PipelineGraph(cfg, bad)
 
 
+def test_detect_flux_drop_in_detector(chunks):
+    """Registry extensibility: the spectral-flux energy detector swaps in
+    for 'detect_silence' purely via the stage list — no executor changes —
+    and keeps transient bird activity while removing silence and steady
+    rain."""
+    st = list(cfg.stages)
+    st[st.index("detect_silence")] = "detect_flux"
+    graph = PipelineGraph(cfg, tuple(st))
+    assert graph.has_removal_point and "detect_flux" in graph.names
+    chunks4, labels = _long_chunks(13, 4)
+    pre = Preprocessor(cfg, plan="two_phase", stages=tuple(st))
+    res = pre(jnp.asarray(chunks4))
+    keep = np.asarray(res.det.keep)
+    assert res.cleaned.shape[0] == keep.sum() == res.n_kept
+    # flux keeps active chunks (bird=0, cicada=2), removes silence + rain
+    active = np.isin(labels, (0, 2))
+    assert (keep == active).mean() >= 0.9
+    # flux also runs stacked WITH the SNR detector (masks OR together)
+    both = tuple(cfg.stages[:-2] + ("detect_flux",) + cfg.stages[-2:])
+    res2 = Preprocessor(cfg, plan="two_phase", stages=both)(
+        jnp.asarray(chunks4))
+    assert not (np.asarray(res2.det.keep) & ~keep).any()
+    # and validation still guards it: flux needs power spectra upstream
+    with pytest.raises(GraphValidationError, match="power"):
+        PipelineGraph(cfg, ("to_mono", "compress", "detect_flux"))
+
+
 def test_two_phase_requires_removal_point():
     graph = PipelineGraph(
         cfg, ("to_mono", "compress", "split_detect", "stft", "detect_rain",

@@ -1,0 +1,301 @@
+"""The persistence subsystem: content-addressed ChunkStore (atomic writes,
+crc-verified reads, hit/miss stats), RunJournal queue snapshots, and
+CachedPlan — including the acceptance criteria: masks bit-identical to an
+uncached ShardedPlan over a 50%-prestored stream, and exactly-once emission
+across a kill + resume."""
+import glob
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import SERF_AUDIO as cfg
+from repro.core.plans import CachedPlan, PLANS, Preprocessor
+from repro.data.loader import audio_batch_maker, make_shard_pool
+from repro.data.queue import SettableClock, WorkQueue
+from repro.distributed.sharding import pool_rules
+from repro.kernels import backend
+from repro.store import ChunkStore, RunJournal, content_key
+
+
+def _stream(seed, wids, batch_long_chunks=1):
+    make = audio_batch_maker(seed=seed, batch_long_chunks=batch_long_chunks)
+    return [(w, make(w)) for w in wids]
+
+
+@pytest.fixture(scope="module")
+def stream4():
+    return _stream(21, range(4))
+
+
+# -------------------------------------------------------------- content key
+
+def test_content_key_sensitivity():
+    x = np.ones((1, 2, 64), np.float32)
+    fp = ("cfg", ("a", "b"), "geom")
+    k = content_key(x, fp, "auto")
+    assert k == content_key(x.copy(), fp, "auto")      # value identity
+    assert k != content_key(x + 1e-6, fp, "auto")      # bytes matter
+    assert k != content_key(x, ("cfg", ("a",), "geom"), "auto")  # graph
+    assert k != content_key(x, fp, "ref")              # backend mode
+    assert len(k) == 64                                # sha256 hex
+
+
+# -------------------------------------------------------------- chunk store
+
+def test_store_roundtrip_and_stats(tmp_path):
+    store = ChunkStore(tmp_path)
+    arrays = {"cleaned": np.arange(12, dtype=np.float32).reshape(3, 4),
+              "keep": np.array([True, False, True])}
+    assert store.put("k1", arrays, meta={"n_kept": 2}) is True
+    assert "k1" in store and len(store) == 1 and store.keys() == ["k1"]
+    got, meta = store.get("k1", src_bytes=100)
+    assert meta["n_kept"] == 2
+    np.testing.assert_array_equal(got["cleaned"], arrays["cleaned"])
+    np.testing.assert_array_equal(got["keep"], arrays["keep"])
+    assert got["keep"].dtype == np.bool_
+    assert store.get("nope") is None
+    st = store.stats
+    assert (st.hits, st.misses, st.writes) == (1, 1, 1)
+    assert st.bytes_saved == 100 and st.bytes_written > 0
+    assert st.hit_rate == 0.5
+    # entries are immutable: a second put of the same key writes nothing
+    assert store.put("k1", arrays) is False
+    assert st.dup_writes == 1
+
+
+def test_store_writes_are_atomic_no_tmp_residue(tmp_path):
+    store = ChunkStore(tmp_path)
+    store.put("deadbeef", {"a": np.zeros(4)})
+    assert glob.glob(os.path.join(str(tmp_path), "objects", "*.tmp-*")) == []
+    # the entry mirrors the ckpt layout: manifest.json + one .npy per leaf
+    entry = os.path.join(str(tmp_path), "objects", "deadbeef")
+    assert sorted(os.listdir(entry)) == ["a.npy", "manifest.json"]
+    # a crashed writer's tmp dir (manifest already written, rename never
+    # happened) is not an entry
+    ghost = os.path.join(str(tmp_path), "objects", "feedface.tmp-xyz")
+    os.makedirs(ghost)
+    open(os.path.join(ghost, "manifest.json"), "w").write("{}")
+    assert store.keys() == ["deadbeef"] and len(store) == 1
+
+
+def test_store_crc_corruption_raises_then_evicts(tmp_path):
+    arrays = {"x": np.arange(8, dtype=np.float32)}
+    strict = ChunkStore(tmp_path)
+    strict.put("kk", arrays)
+    target = os.path.join(str(tmp_path), "objects", "kk", "x.npy")
+    raw = bytearray(open(target, "rb").read())
+    raw[-1] ^= 0xFF
+    open(target, "wb").write(bytes(raw))
+    with pytest.raises(IOError, match="crc"):
+        strict.get("kk")
+    healing = ChunkStore(tmp_path, evict_corrupt=True)
+    assert healing.get("kk") is None               # evicted + miss
+    assert healing.stats.corrupt == 1
+    assert "kk" not in healing                     # a re-put self-heals
+    assert healing.put("kk", arrays) is True
+    got, _ = healing.get("kk")
+    np.testing.assert_array_equal(got["x"], arrays["x"])
+
+
+# ------------------------------------------------------------------ journal
+
+def test_run_journal_roundtrip(tmp_path):
+    j = RunJournal(tmp_path)
+    assert j.load() is None and j.resume_queue() is None
+    clock = SettableClock()
+    q = WorkQueue(5, lease_timeout_s=10.0, clock=clock)
+    q.lease("w", 2)
+    q.complete([0])
+    j.record(q, meta={"note": "mid-run"})
+    meta = j.load()
+    assert meta["emitted"] == 1 and meta["note"] == "mid-run"
+    assert meta["queue"]["done"] == [0] and meta["queue"]["leased"] == [1]
+    q2 = j.resume_queue(n_items=5, clock=SettableClock())
+    ids = q2.lease("w2", 10)
+    assert sorted(ids) == [1, 2, 3, 4]             # 1 redelivered, 0 never
+    with pytest.raises(ValueError, match="refusing to mix"):
+        j.resume_queue(n_items=7)
+    # a fresh handle on the same directory resumes the step counter
+    j2 = RunJournal(tmp_path)
+    assert j2.step == j.step
+    j2.record(q2)
+    assert j2.step == j.step + 1
+
+
+# -------------------------------------------------------------- cached plan
+
+def test_cached_plan_registered_and_passthrough(stream4):
+    assert PLANS["cached"] is CachedPlan
+    ref = {r.wid: r for r in
+           Preprocessor(cfg, plan="two_phase").run(stream4)}
+    pre = Preprocessor(cfg, plan="cached")         # no store: passthrough
+    assert pre.plan.stats is None
+    got = {r.wid: r for r in pre.run(stream4)}
+    assert sorted(got) == sorted(ref)
+    for w in ref:
+        np.testing.assert_array_equal(np.asarray(got[w].det.keep),
+                                      np.asarray(ref[w].det.keep))
+        np.testing.assert_allclose(got[w].cleaned, ref[w].cleaned,
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_cached_sharded_50pct_prestored_bit_identical(tmp_path, stream4):
+    """ACCEPTANCE: CachedPlan(inner='sharded') over a stream whose first
+    half was previously stored produces survivor masks bit-identical to an
+    uncached ShardedPlan run, with hit/miss stats reported."""
+    ref = {r.wid: r for r in
+           Preprocessor(cfg, plan="sharded", shards=2).run(stream4)}
+    seed_pre = Preprocessor(cfg, plan="cached", inner="sharded", shards=2,
+                            store=tmp_path)
+    list(seed_pre.run(stream4[:2]))                # pre-store 50%
+    assert seed_pre.plan.stats.writes == 2
+
+    pre = Preprocessor(cfg, plan="cached", inner="sharded", shards=2,
+                       store=tmp_path)
+    got = {r.wid: r for r in pre.run(stream4)}
+    st = pre.plan.stats
+    assert (st.hits, st.misses) == (2, 2) and st.hit_rate == 0.5
+    assert st.bytes_saved > 0
+    assert sorted(got) == sorted(ref)
+    for w in ref:
+        np.testing.assert_array_equal(np.asarray(got[w].det.keep),
+                                      np.asarray(ref[w].det.keep))
+        np.testing.assert_allclose(got[w].cleaned, ref[w].cleaned,
+                                   rtol=1e-4, atol=1e-5)
+        assert got[w].n_kept == ref[w].n_kept
+    # a third, fully-warm run never touches the inner plan
+    warm = Preprocessor(cfg, plan="cached", inner="sharded", shards=2,
+                        store=tmp_path)
+    warm_res = {r.wid: r for r in warm.run(stream4)}
+    assert warm.plan.stats.hit_rate == 1.0
+    for w in ref:
+        np.testing.assert_array_equal(np.asarray(warm_res[w].det.keep),
+                                      np.asarray(ref[w].det.keep))
+
+
+def test_cached_emits_in_stream_order_with_labels(tmp_path):
+    stream = [(w, (chunks, f"label{w}"))
+              for w, (_, (chunks, _)) in enumerate(_stream(9, range(3)))]
+    pre = Preprocessor(cfg, plan="cached", store=tmp_path)
+    list(pre.run(stream[:1]))                      # wid 0 pre-stored
+    results = list(Preprocessor(cfg, plan="cached", store=tmp_path)
+                   .run(stream))
+    assert [r.wid for r in results] == [0, 1, 2]   # merged back in order
+    assert [r.labels for r in results] == ["label0", "label1", "label2"]
+
+
+def test_cached_kill_and_resume_exactly_once(tmp_path, stream4):
+    """ACCEPTANCE: a journaled run killed mid-stream and relaunched with
+    resume=True emits each chunk exactly once across the two processes."""
+    store = os.path.join(str(tmp_path), "store")
+    pre = Preprocessor(cfg, plan="cached", store=store, journal=True)
+    gen = pre.run(stream4)
+    first = [next(gen).wid, next(gen).wid]
+    gen.close()                                    # 'kill' mid-stream
+    assert first == [0, 1]
+    # resume=False would re-emit from scratch; resume=True must not
+    pre2 = Preprocessor(cfg, plan="cached", store=store, journal=True,
+                        resume=True)
+    rest = [r.wid for r in pre2.run(stream4)]
+    assert sorted(first + rest) == [0, 1, 2, 3]    # exactly once
+    # emission is incremental, so the killed run only computed (and stored)
+    # what it emitted; the resume pays compute for the tail alone and the
+    # store ends up holding the full stream
+    assert pre2.plan.stats.misses == 2
+    assert len(pre2.plan.store) == 4
+    # resuming a FINISHED run emits nothing
+    pre3 = Preprocessor(cfg, plan="cached", store=store, journal=True,
+                        resume=True)
+    assert list(pre3.run(stream4)) == []
+    # and a mismatched stream is refused, not silently mixed
+    with pytest.raises(ValueError, match="refusing to mix"):
+        list(Preprocessor(cfg, plan="cached", store=store, journal=True,
+                          resume=True).run(stream4[:3]))
+    # ... including a SAME-LENGTH stream with different content: resuming
+    # must never silently skip chunks the dead run never saw
+    other = _stream(99, range(4))
+    with pytest.raises(ValueError, match="different content"):
+        list(Preprocessor(cfg, plan="cached", store=store, journal=True,
+                          resume=True).run(other))
+
+
+def test_cached_call_and_warm_cache_serving(tmp_path):
+    from repro.serve.preprocess_service import PreprocessService
+    make = audio_batch_maker(seed=6, batch_long_chunks=1)
+    long_chunk = make(0)[0][0]                     # one (C, S) long chunk
+    svc = PreprocessService(cfg, batch_long_chunks=2, plan="cached",
+                            store=tmp_path)
+    rid = svc.submit(long_chunk)
+    svc.pump()
+    cold = svc.result(rid)
+    assert svc.cache_stats.misses == 1
+    rid2 = svc.submit(long_chunk)                  # identical request group
+    svc.pump()
+    warm = svc.result(rid2)
+    assert svc.cache_stats.hits == 1
+    np.testing.assert_array_equal(warm["keep"], cold["keep"])
+    np.testing.assert_allclose(warm["cleaned"], cold["cleaned"],
+                               rtol=1e-6)
+    # an uncached service reports no stats
+    assert PreprocessService(cfg, plan="two_phase").cache_stats is None
+
+
+def test_cached_plan_validation(tmp_path):
+    with pytest.raises(ValueError, match="only valid with the sharded"):
+        Preprocessor(cfg, pool_rules(2), plan="cached", inner="two_phase")
+    # pool rules + sharded inner is the supported combination
+    pre = Preprocessor(cfg, pool_rules(2), plan="cached", inner="sharded",
+                       shards=2)
+    assert pre.plan.inner.shards == 2
+    with pytest.raises(ValueError, match="resume=True needs a journal"):
+        Preprocessor(cfg, plan="cached", store=tmp_path, resume=True)
+    with pytest.raises(ValueError, match="journal=True"):
+        Preprocessor(cfg, plan="cached", journal=True)
+    pool = make_shard_pool(audio_batch_maker(0), 2, 2)
+    with pytest.raises(ValueError, match="plain batch stream"):
+        list(Preprocessor(cfg, plan="cached",
+                          store=tmp_path).run(pool))
+
+
+def test_cached_plan_self_heals_corrupt_entry(tmp_path, stream4):
+    """A bit-rotted store entry behind a path-constructed CachedPlan is
+    evicted and recomputed, not fatal on every future run."""
+    pre = Preprocessor(cfg, plan="cached", store=tmp_path)
+    ref = list(pre.run(stream4[:1]))
+    key = pre.plan.store.keys()[0]
+    target = os.path.join(str(tmp_path), "objects", key, "cleaned.npy")
+    raw = bytearray(open(target, "rb").read())
+    raw[-1] ^= 0xFF
+    open(target, "wb").write(bytes(raw))
+    pre2 = Preprocessor(cfg, plan="cached", store=tmp_path)
+    got = list(pre2.run(stream4[:1]))
+    assert pre2.plan.stats.corrupt == 1 and pre2.plan.stats.writes == 1
+    np.testing.assert_allclose(got[0].cleaned, ref[0].cleaned, rtol=1e-6)
+    # the rewritten entry hits again
+    pre3 = Preprocessor(cfg, plan="cached", store=tmp_path)
+    list(pre3.run(stream4[:1]))
+    assert pre3.plan.stats.hits == 1
+
+
+def test_cached_key_isolation_across_graph_and_backend(tmp_path, stream4):
+    """A store shared across configurations can never serve a stale entry:
+    the key binds the graph fingerprint and kernel backend mode."""
+    import dataclasses
+    pre = Preprocessor(cfg, plan="cached", store=tmp_path)
+    list(pre.run(stream4[:1]))
+    assert pre.plan.stats.writes == 1
+    # same bytes, different stage list -> different key -> miss
+    cfg2 = dataclasses.replace(cfg, stages=cfg.stages[:-1])
+    pre2 = Preprocessor(cfg2, plan="cached", store=tmp_path)
+    list(pre2.run(stream4[:1]))
+    assert pre2.plan.stats.misses == 1 and pre2.plan.stats.hits == 0
+    # same bytes + graph, different backend mode -> miss
+    with backend.use("ref"):
+        pre3 = Preprocessor(cfg, plan="cached", store=tmp_path)
+        list(pre3.run(stream4[:1]))
+    assert pre3.plan.stats.misses == 1 and pre3.plan.stats.hits == 0
+    # original configuration still hits
+    pre4 = Preprocessor(cfg, plan="cached", store=tmp_path)
+    list(pre4.run(stream4[:1]))
+    assert pre4.plan.stats.hits == 1
