@@ -22,7 +22,10 @@ def smoke():
     and zero lost or duplicated chunks. Then the cache gate: the same tiny
     stream twice through CachedPlan over a fresh store — the second pass
     must be >= 90% hits with survivor masks bit-identical to the uncached
-    reference."""
+    reference. Then the async-pipeline gate: `--plan async --depth 4` on a
+    tiny stream must emit every chunk id exactly once IN INPUT ORDER,
+    bit-identical to two_phase, with >= 1 overlapped dispatch visible in
+    the per-batch timing records."""
     import numpy as np
     from repro.configs import SERF_AUDIO as cfg
     from repro.core.plans import PLANS, Preprocessor
@@ -66,7 +69,12 @@ def smoke():
     except Exception:
         failures.append("cache")
         traceback.print_exc()
-    n_gates = len(PLANS) + 2
+    try:
+        _async_smoke(np, cfg, Preprocessor)
+    except Exception:
+        failures.append("async-pipeline")
+        traceback.print_exc()
+    n_gates = len(PLANS) + 3
     print(f"\nsmoke: {n_gates - len(failures)}/{n_gates} "
           f"gates OK" + (f"; FAILED: {failures}" if failures else ""))
     raise SystemExit(1 if failures else 0)
@@ -139,6 +147,36 @@ def _cache_smoke(np, cfg, Preprocessor, stream, ref):
         shutil.rmtree(store_dir, ignore_errors=True)
 
 
+def _async_smoke(np, cfg, Preprocessor):
+    """Depth-4 async executor gate: a 5-batch stream must come out in
+    input order with zero lost/duplicated chunks, bit-identical to
+    two_phase, and the timing records must show at least one dispatch that
+    overlapped earlier in-flight work (the whole point of the window)."""
+    from repro.data.loader import audio_batch_maker
+
+    t0 = time.time()
+    n_batches = 5
+    make = audio_batch_maker(seed=5, batch_long_chunks=2)
+    stream = [(w, (make(w)[0], None)) for w in range(n_batches)]
+    pre = Preprocessor(cfg, plan="async", depth=4, pad_multiple=1)
+    results = list(pre.run(stream))
+    wids = [r.wid for r in results]
+    assert wids == list(range(n_batches)), \
+        f"async emitted out of order / lost chunks: {wids}"
+    overlapped = sum(1 for t in pre.plan.last_timings
+                     if t.get("in_flight", 1) >= 2)
+    assert overlapped >= 1, "no overlapped dispatch in the timing record"
+    ref = Preprocessor(cfg, plan="two_phase", pad_multiple=1)
+    for r in results:
+        want = ref(make(r.wid)[0])
+        np.testing.assert_array_equal(np.asarray(r.det.keep),
+                                      np.asarray(want.det.keep))
+        np.testing.assert_array_equal(r.cleaned, want.cleaned)
+    print(f"plan async-pipe OK: depth 4, {len(wids)}/{n_batches} chunk ids "
+          f"in order, {overlapped} overlapped dispatches, cleaned "
+          f"bit-identical to two_phase in {time.time() - t0:.1f}s")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -155,7 +193,8 @@ def main():
                             bench_detector_accuracy, bench_split_accuracy,
                             bench_comm, bench_config_search, bench_scaling,
                             bench_load_balance, bench_utilization,
-                            bench_early_exit, bench_cache)
+                            bench_early_exit, bench_cache,
+                            bench_dispatch_depth)
     steps = [
         ("Table 1 / Fig 1: stage times",
          lambda: bench_stage_times.run(minutes=minutes)),
@@ -178,6 +217,9 @@ def main():
          lambda: bench_early_exit.run(minutes=4.0)),
         ("Store: cold/warm/partial-overlap cache economics",
          lambda: bench_cache.run(minutes=8.0 if not args.full else 32.0)),
+        ("Pipeline: dispatch depth x survivor buckets",
+         lambda: bench_dispatch_depth.run(
+             minutes=16.0 if not args.full else 32.0)),
     ]
     failures = []
     for name, fn in steps:

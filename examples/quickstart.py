@@ -26,7 +26,8 @@ def main():
           {l: int((labels == i).sum()) for i, l in enumerate(LABELS)})
 
     # The stage order is DATA on the config; the plan decides execution
-    # (fused / two_phase / streaming — see repro.core.plans.PLANS).
+    # (fused / two_phase / streaming / async / sharded / cached —
+    # see repro.core.plans.PLANS).
     pre = Preprocessor(cfg, plan="two_phase",
                        pad_multiple=len(jax.devices()))
     res = pre(jnp.asarray(long_chunks))

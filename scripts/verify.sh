@@ -8,7 +8,11 @@
 #      finish with redeliveries >= 1 and zero lost/duplicated chunks —
 #      PLUS the cache gate — the same tiny stream twice through
 #      CachedPlan over a fresh store: the second pass must be >= 90%
-#      cache hits with survivor masks bit-identical to the uncached plan
+#      cache hits with survivor masks bit-identical to the uncached plan —
+#      PLUS the async-pipeline gate — `--plan async --depth 4` on a tiny
+#      stream must emit every chunk id exactly once in input order,
+#      bit-identical to two_phase, with >= 1 overlapped dispatch observed
+#      in the per-batch timing records
 #
 #   bash scripts/verify.sh [extra pytest args]
 set -euo pipefail

@@ -466,6 +466,17 @@ class PipelineGraph:
         state = self._run(self.stages[self._cut():], {"wave": wave}, rules)
         return state["wave"]
 
+    def tail_indexed(self, wave, idx, rules=NULL_RULES):
+        """Phase B with DEVICE-RESIDENT compaction: gather the survivor
+        rows `idx` (padded int32, static shape) out of the full
+        pre-denoise batch on device, then run the survivor stages. The
+        host only ever supplies the tiny index vector — the waveform never
+        round-trips. Out-of-range indices (the pad convention of
+        `scheduler.survivor_indices`) become all-zero rows via the fill
+        gather, so padding never duplicates real audio."""
+        batch = jnp.take(wave, idx, axis=0, mode="fill", fill_value=0.0)
+        return self.tail(batch, rules)
+
     def fused(self, audio, rules=NULL_RULES) -> PipelineOutput:
         """Single-trace mode: the whole chain, removed chunks masked but
         still computed (the paper's no-early-exit baseline)."""

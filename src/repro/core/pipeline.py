@@ -6,8 +6,8 @@ expressed as config data):
   * `repro.core.graph`  — `Stage` protocol + `STAGES` registry +
     `PipelineGraph` (build-time shape validation, `removal_point` markers).
   * `repro.core.plans`  — `FusedPlan` / `TwoPhasePlan` / `StreamingPlan` /
-    `ShardedPlan` behind the `Preprocessor` facade, with a keyed LRU
-    compile cache.
+    `AsyncPlan` / `ShardedPlan` / `CachedPlan` behind the `Preprocessor`
+    facade, with a keyed LRU compile cache.
 
 The paper's stage order lives on `AudioPipelineConfig.stages`:
 

@@ -1,7 +1,7 @@
 """Execution plans: HOW a validated `PipelineGraph` runs on a batch stream.
 
 The graph fixes WHAT computes (stage order, removal points); a plan picks
-the execution strategy. Five plans, and when to pick each:
+the execution strategy. Six plans, and when to pick each:
 
   * `FusedPlan`     — one jit straight through; removed chunks are masked
                       but still computed (the paper's no-early-exit
@@ -16,8 +16,25 @@ the execution strategy. Five plans, and when to pick each:
   * `StreamingPlan` — two-phase with dispatch-ahead over a loader: phase-A
                       detection of batch k+1 is enqueued on the device
                       before phase B of batch k, so host-side mask readback
-                      + compaction overlap device work. Pick for long
-                      single-host streams where readback latency shows.
+                      + compaction overlap device work. Now a depth-1
+                      `AsyncPlan` with the historical linear padding — kept
+                      as the conservative dispatch-ahead baseline.
+  * `AsyncPlan`     — the deep pipeline: a bounded window of `depth`
+                      detection batches in flight (keep masks prefetched
+                      with `copy_to_host_async` the moment each detect is
+                      enqueued), device-resident survivor compaction (the
+                      tail jit gathers survivors out of the still-on-device
+                      batch; only the B-bool mask and the cleaned survivors
+                      ever cross the host boundary), power-of-two survivor
+                      buckets (O(log B) tail compiles instead of one per
+                      count), optional buffer donation, and double-buffered
+                      cleaned readback. Per-batch `BatchResult.timings`
+                      record dispatch/readback/compact/tail/emit plus the
+                      in-flight depth and transferred bytes. Pick for long
+                      single-host streams; `depth` 2-4 is enough to hide
+                      mask readback on one device — go deeper only when
+                      emission jitter (a slow consumer) must also be
+                      absorbed. Emission order is ALWAYS input order.
   * `ShardedPlan`   — the multi-shard execution backbone: per-shard
                       `ShardedLoader`s pull leased work ids from ONE shared
                       `WorkQueue` (at-least-once redelivery on lease expiry
@@ -76,10 +93,15 @@ from repro.store import ChunkStore, RunJournal, content_key
 
 
 class CompileCache:
-    """Small keyed LRU for jitted phase functions (capped — the old global
-    grew without bound)."""
+    """Keyed LRU for jitted phase functions (capped — the old global grew
+    without bound). Tail compiles key per padded survivor size, so the
+    cap bounds COMPILE memory too: hot entries (the every-batch detect,
+    pow2's O(log B) buckets) stay resident by recency, while a stream
+    that insists on linear padding over more distinct survivor counts
+    than the cap re-pays those compiles — the pathology pow2 bucketing
+    exists to remove, kept bounded rather than hidden."""
 
-    def __init__(self, maxsize=64):
+    def __init__(self, maxsize=256):
         self.maxsize = maxsize
         self._d = collections.OrderedDict()
 
@@ -99,11 +121,14 @@ class CompileCache:
     def __contains__(self, key):
         return key in self._d
 
+    def keys(self):
+        return list(self._d)
+
     def clear(self):
         self._d.clear()
 
 
-JIT_CACHE = CompileCache(maxsize=64)
+JIT_CACHE = CompileCache(maxsize=256)
 
 
 def _cache_key(kind, graph: PipelineGraph, rules):
@@ -119,12 +144,23 @@ def _phase_fn(kind, graph: PipelineGraph, rules):
         return lambda a: graph.detection(a, rules)
     if kind in ("tail", "mmse"):
         return lambda w: graph.tail(w, rules)
+    if kind == "tail_idx":
+        return lambda w, i: graph.tail_indexed(w, i, rules)
     raise KeyError(f"unknown phase {kind!r}")
 
 
-def _jitted(kind, graph, rules):
-    return JIT_CACHE.get(_cache_key(kind, graph, rules),
-                         lambda: jax.jit(_phase_fn(kind, graph, rules)))
+def _jitted(kind, graph, rules, donate=(), shape=None):
+    """Jitted phase from the shared cache. `donate` (a donate_argnums
+    tuple) is part of the key: a donating and a non-donating caller of the
+    same phase must not alias one compile. `shape` (the padded survivor
+    count for the tail gather) is keyed too, so one cache entry == one
+    XLA compile and the cache length is an honest retrace ledger —
+    without it, shape retraces would hide inside a single jit wrapper,
+    uncountable and uncapped by the LRU."""
+    donate = tuple(donate)
+    return JIT_CACHE.get(_cache_key(kind, graph, rules) + (donate, shape),
+                         lambda: jax.jit(_phase_fn(kind, graph, rules),
+                                         donate_argnums=donate))
 
 
 @dataclass
@@ -136,6 +172,16 @@ class BatchResult:
     wid: object = None              # loader work id (when run over a loader)
     labels: object = field(default=None, repr=False)   # loader passthrough
     src_bytes: int = 0              # measured input bytes (throughput acct)
+    timings: dict = field(default=None, repr=False)
+    # per-batch pipeline instrumentation (two-phase-family plans):
+    #   dispatch_s  detect enqueue time (async — not detect compute time)
+    #   readback_s  blocking part of the keep-mask readback
+    #   compact_s   host index bookkeeping (the whole "master" role now)
+    #   tail_s      tail enqueue + async cleaned-copy start
+    #   emit_s      blocking part of the cleaned readback at emission
+    #   in_flight   detect batches in the window when this one dispatched
+    #   d2h_bytes / h2d_bytes   host-boundary traffic this batch caused
+    #   tail_rows / n_real      padded tail batch rows vs real survivors
 
 
 class _StreamMeta:
@@ -197,57 +243,196 @@ class FusedPlan(ExecutionPlan):
                            src_bytes=int(x.nbytes))
 
 
+@dataclass
+class _PendingTail:
+    """A batch whose tail is dispatched but not yet read back: everything
+    `_emit` needs, held while the device works and the cleaned rows stream
+    host-ward via copy_to_host_async."""
+    det: PipelineOutput
+    out: object                     # device cleaned batch (None: 0 kept)
+    n_real: int
+    wid: object
+    extra: object
+    src_bytes: int
+    timings: dict
+
+
 class TwoPhasePlan(ExecutionPlan):
     name = "two_phase"
 
-    def __init__(self, graph, rules=NULL_RULES, pad_multiple=1):
+    def __init__(self, graph, rules=NULL_RULES, pad_multiple=1,
+                 bucket="linear", donate=False):
         super().__init__(graph, rules, pad_multiple)
         if not graph.has_removal_point:
             raise GraphValidationError(
                 f"plan '{self.name}' needs a 'removal_point' stage in the "
                 f"graph (stages: {graph.names}); use the fused plan for "
                 f"graphs without early exit")
+        self.bucket = bucket
+        SCHED.quantize_survivors(0, 1, 1, bucket)     # validate the mode
+        if donate is None:                            # auto: off on CPU,
+            donate = jax.default_backend() != "cpu"   # on where it pays
+        self.donate = bool(donate)
 
     def detect(self, audio) -> PipelineOutput:
         return _jitted("detect", self.graph, self.rules)(jnp.asarray(audio))
 
-    def _finish(self, det: PipelineOutput, wid=None, extra=None,
-                src_bytes=0):
-        """Host-side master bookkeeping: read the mask, compact survivors
-        to a padded batch (pad_multiple quantizes phase-B shapes so the
-        tail jit rarely retraces), run the tail."""
-        wave = np.asarray(det.wave5)
-        keep = np.asarray(det.keep)
-        batch, n_real = SCHED.survivor_batch(wave, keep, self.pad_multiple)
-        if batch is None:
-            cleaned = np.zeros((0, wave.shape[1]), np.float32)
+    def _detect_donated(self, x) -> PipelineOutput:
+        """Detect with the input buffer donated to the jit — only valid
+        when the caller owns `x` (it made the device copy itself)."""
+        donate = (0,) if self.donate else ()
+        return _jitted("detect", self.graph, self.rules, donate)(x)
+
+    def _start_tail(self, det: PipelineOutput, wid=None, extra=None,
+                    src_bytes=0, timings=None) -> _PendingTail:
+        """Master bookkeeping, device-resident: the host reads back ONLY
+        the keep mask (B bools), builds a padded survivor-index vector
+        (bucketed so the tail jit compiles O(log B) shape variants), and
+        the tail jit gathers + compacts + denoises ON DEVICE — the full
+        pre-denoise waveform never crosses the host boundary. With
+        `donate` the wave5 buffer is donated to the tail gather, so the
+        det record's wave5 must not be read after this call."""
+        t0 = time.perf_counter()
+        keep = np.asarray(det.keep)                   # the only readback
+        t1 = time.perf_counter()
+        idx, n_real = SCHED.survivor_indices(keep, self.pad_multiple,
+                                             self.bucket)
+        t2 = time.perf_counter()
+        out, h2d = None, 0
+        if n_real:
+            donate = (0,) if self.donate else ()
+            tail = _jitted("tail_idx", self.graph, self.rules, donate,
+                           shape=len(idx))
+            out = tail(det.wave5, jnp.asarray(idx))   # async dispatch
+            if hasattr(out, "copy_to_host_async"):
+                out.copy_to_host_async()              # stream back early
+            h2d = idx.nbytes
+        t3 = time.perf_counter()
+        timings = dict(timings or {})
+        timings.update(
+            readback_s=t1 - t0, compact_s=t2 - t1, tail_s=t3 - t2,
+            h2d_bytes=h2d, d2h_bytes=keep.nbytes,
+            tail_rows=0 if idx is None else len(idx), n_real=n_real,
+            # what the pre-device-compaction bookkeeping shipped host-ward
+            # per batch (the full wave5) — off the aval, no transfer
+            wave5_bytes=int(np.prod(det.wave5.shape))
+            * det.wave5.dtype.itemsize)
+        return _PendingTail(det, out, n_real, wid, extra, src_bytes,
+                            timings)
+
+    def _emit(self, pend: _PendingTail) -> BatchResult:
+        """Block on (the remainder of) the cleaned readback and build the
+        result. Padded rows are sliced off here — and they are zero rows
+        from the fill gather, never repeats of real audio."""
+        t0 = time.perf_counter()
+        if pend.out is None:
+            cleaned = np.zeros((0, pend.det.wave5.shape[-1]), np.float32)
         else:
-            tail = _jitted("tail", self.graph, self.rules)
-            cleaned = np.asarray(tail(jnp.asarray(batch)))[:n_real]
-        return BatchResult(cleaned=cleaned, det=det, n_kept=n_real,
-                           wid=wid, labels=extra, src_bytes=src_bytes)
+            cleaned = np.asarray(pend.out)[:pend.n_real]
+            pend.timings["d2h_bytes"] += pend.out.nbytes
+        pend.timings["emit_s"] = time.perf_counter() - t0
+        # the pre-device-compaction boundary for THIS batch: full wave5 +
+        # mask down, the LINEAR-padded survivor batch up, the same padded
+        # tail output down (the old path sliced [:n_real] only after the
+        # full transfer) — its actual cost on this stream, not a model
+        lin_rows = SCHED.quantize_survivors(
+            pend.n_real, pend.det.keep.size, self.pad_multiple,
+            "linear") if pend.n_real else 0
+        row_bytes = cleaned.shape[-1] * cleaned.dtype.itemsize
+        pend.timings["old_boundary_bytes"] = (
+            pend.timings["wave5_bytes"] + pend.det.keep.size
+            + 2 * lin_rows * row_bytes)
+        return BatchResult(cleaned=cleaned, det=pend.det,
+                           n_kept=pend.n_real, wid=pend.wid,
+                           labels=pend.extra, src_bytes=pend.src_bytes,
+                           timings=pend.timings)
+
+    def _finish(self, det: PipelineOutput, wid=None, extra=None,
+                src_bytes=0, timings=None):
+        return self._emit(self._start_tail(det, wid, extra, src_bytes,
+                                           timings))
 
     def __call__(self, audio) -> BatchResult:
         x = jnp.asarray(audio)
         return self._finish(self.detect(x), src_bytes=int(x.nbytes))
 
 
-class StreamingPlan(TwoPhasePlan):
-    """Two-phase with one batch of dispatch-ahead: detection of batch k+1
-    is already in the device queue while the host does batch k's mask
-    readback, compaction, and tail dispatch."""
-    name = "streaming"
+class AsyncPlan(TwoPhasePlan):
+    """Depth-K asynchronous streaming executor: a bounded window of `depth`
+    detection batches dispatched ahead, each keep mask prefetched to host
+    the moment its detect is enqueued (double-buffered mask readback), the
+    tail gathering survivors device-side, and one finished tail held back
+    so its cleaned rows stream host-ward while the next batch computes
+    (double-buffered emission). Defaults to power-of-two survivor buckets
+    and, on non-CPU backends, donated detect/tail buffers. Emission is
+    strictly input order; `last_timings` keeps the per-batch records of the
+    most recent run()."""
+    name = "async"
+
+    def __init__(self, graph, rules=NULL_RULES, pad_multiple=1, depth=2,
+                 bucket="pow2", donate=None, emit_buffer=1):
+        super().__init__(graph, rules, pad_multiple, bucket=bucket,
+                         donate=donate)
+        self.depth = max(1, int(depth))
+        # dispatched tails retained before emission: 1 double-buffers the
+        # cleaned readback behind the next batch (+1 batch of emission
+        # latency and one extra resident batch); 0 emits each result the
+        # moment its tail is dispatched (the pre-PR streaming schedule)
+        self.emit_buffer = max(0, int(emit_buffer))
+        self.last_timings = []
 
     def run(self, batches):
-        pending = None
+        self.last_timings = []
+        dets = collections.deque()       # detect window (<= depth)
+        tails = collections.deque()      # dispatched tails (<= 2)
+
+        def start_oldest_tail():
+            tails.append(self._start_tail(*dets.popleft()))
+
+        def emit_oldest():
+            res = self._emit(tails.popleft())
+            self.last_timings.append(res.timings)
+            return res
+
         for wid, chunks, extra in _iter_batches(batches):
+            t0 = time.perf_counter()
+            owned = not isinstance(chunks, jax.Array)
             x = jnp.asarray(chunks)
-            det = self.detect(x)                      # async dispatch
-            if pending is not None:
-                yield self._finish(*pending)
-            pending = (det, wid, extra, int(x.nbytes))
-        if pending is not None:
-            yield self._finish(*pending)
+            det = self._detect_donated(x) if owned and self.donate \
+                else self.detect(x)                   # async dispatch
+            if hasattr(det.keep, "copy_to_host_async"):
+                det.keep.copy_to_host_async()         # prefetch the mask
+            timings = {"dispatch_s": time.perf_counter() - t0,
+                       "in_flight": len(dets) + 1}
+            dets.append((det, wid, extra, int(x.nbytes), timings))
+            if len(dets) > self.depth:
+                start_oldest_tail()
+            while len(tails) > self.emit_buffer:
+                yield emit_oldest()
+        while dets:
+            start_oldest_tail()
+            while len(tails) > self.emit_buffer:
+                yield emit_oldest()
+        while tails:
+            yield emit_oldest()
+
+
+class StreamingPlan(AsyncPlan):
+    """Two-phase with one batch of dispatch-ahead: detection of batch k+1
+    is already in the device queue while the host does batch k's mask
+    readback, compaction, tail dispatch AND emission — the historical
+    schedule, preserved exactly: depth 1, linear tail padding, no
+    donation, no emission hold-back (`emit_buffer=0`, so each result is
+    yielded the moment its tail is dispatched, one batch earlier than
+    `async`'s double-buffered emission). `async` is this plan with the
+    dials turned up."""
+    name = "streaming"
+
+    def __init__(self, graph, rules=NULL_RULES, pad_multiple=1, depth=1,
+                 bucket="linear", donate=False, emit_buffer=0):
+        super().__init__(graph, rules, pad_multiple, depth=depth,
+                         bucket=bucket, donate=donate,
+                         emit_buffer=emit_buffer)
 
 
 class ShardedPlan(TwoPhasePlan):
@@ -574,7 +759,9 @@ class CachedPlan(ExecutionPlan):
                  for k, v in det.stats.items()}
         meta = {"stats": stats, "n_kept": int(res.n_kept),
                 "src_bytes": int(res.src_bytes),
-                "wave_width": int(np.asarray(det.wave5).shape[-1])}
+                # shape comes off the aval — no device->host transfer of
+                # the full wave5 (which a donating tail may have consumed)
+                "wave_width": int(det.wave5.shape[-1])}
         return arrays, meta
 
     def _result(self, arrays, meta, wid, extra) -> BatchResult:
@@ -723,7 +910,7 @@ def _merge_outputs(outs):
 
 
 PLANS = {p.name: p for p in (FusedPlan, TwoPhasePlan, StreamingPlan,
-                             ShardedPlan, CachedPlan)}
+                             AsyncPlan, ShardedPlan, CachedPlan)}
 
 
 class Preprocessor:

@@ -64,30 +64,77 @@ def balance_stats(keep, n_shards):
             "imbalance_after_compact": imb_after}
 
 
+def quantize_survivors(n, cap, pad_multiple=1, bucket="pow2"):
+    """Padded tail-batch size for `n` survivors out of a `cap`-row batch.
+
+    'linear' is the historical quantization — the next multiple of
+    pad_multiple — which retraces the tail jit once per distinct survivor
+    count when pad_multiple is small. 'pow2' rounds up to the next
+    pad_multiple-aligned power-of-two bucket (clipped at the padded cap),
+    so a B-row batch compiles O(log B) tail variants total, whatever the
+    survivor counts of the stream."""
+    n = int(n)
+    m = max(1, int(pad_multiple))
+    lin = -(-n // m) * m
+    if bucket == "linear":
+        return lin
+    if bucket != "pow2":
+        raise ValueError(f"unknown bucket mode {bucket!r} "
+                         "(expected 'pow2' or 'linear')")
+    hi = max(lin, -(-int(cap) // m) * m)
+    size = m
+    while size < n:
+        size *= 2
+    return min(size, hi)
+
+
+def survivor_indices(keep_np, pad_multiple=1, bucket="pow2"):
+    """Device-compaction bookkeeping: the host reads ONLY the keep mask and
+    answers with a padded int32 gather-index vector; the tail jit compacts
+    on device (`jnp.take(..., mode='fill')`), so the full pre-denoise
+    waveform never round-trips through the host.
+
+    Pad slots hold the out-of-range index `len(keep_np)`, which the fill
+    gather turns into all-zero rows — never a repeat of real audio, so
+    padding costs deterministic zero-row flops and can never leak a
+    duplicated chunk into output. Returns (idx, n_real); idx is None when
+    nothing survived."""
+    idx = np.flatnonzero(keep_np)
+    n = len(idx)
+    if n == 0:
+        return None, 0
+    size = quantize_survivors(n, keep_np.size, pad_multiple, bucket)
+    out = np.full(size, keep_np.size, np.int32)
+    out[:n] = idx
+    return out, n
+
+
 def survivor_batch(chunks_np, keep_np, pad_multiple):
     """Host-side ("master") re-batching of survivors for the MMSE phase:
     pad survivor count up to a multiple of the device count so the phase-B
-    jit shards evenly. Returns (batch, n_real)."""
+    jit shards evenly. Returns (batch, n_real). This is the host fallback
+    of the device-compaction path (`survivor_indices` + `graph.
+    tail_indexed`), kept for host-side consumers and reference tests."""
     idx = np.nonzero(keep_np)[0]
     n = len(idx)
     if n == 0:
         return None, 0
-    n_pad = -(-n // pad_multiple) * pad_multiple
-    sel = np.concatenate([idx, np.repeat(idx[-1:], n_pad - n)])
-    return chunks_np[sel], n
+    return pad_batch(chunks_np[idx], pad_multiple)
 
 
 def pad_batch(rows_np, pad_multiple):
     """Pad an already-packed survivor batch up to a multiple of
-    pad_multiple by repeating the last row. Returns (batch, n_real)."""
+    pad_multiple with ZERO rows. (It used to repeat the last row — wasted
+    MMSE flops on real audio, and a latent duplicate-output hazard if a
+    consumer ever forgot to slice [:n_real].) Returns (batch, n_real)."""
     n = rows_np.shape[0]
     if n == 0:
         return None, 0
     n_pad = -(-n // pad_multiple) * pad_multiple
     if n_pad == n:
         return rows_np, n
-    return np.concatenate([rows_np, np.repeat(rows_np[-1:], n_pad - n,
-                                              axis=0)]), n
+    pad = np.zeros((n_pad - n,) + rows_np.shape[1:], rows_np.dtype)
+    return np.concatenate([rows_np, pad]), n
 
 
 # ------------------------------------------------------------- rebalancing

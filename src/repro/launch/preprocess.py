@@ -1,7 +1,7 @@
 """The paper's end-to-end driver: preprocess a stream of bird-acoustic long
 chunks through the stage-graph pipeline under a chosen execution plan.
 
-  PYTHONPATH=src python -m repro.launch.preprocess --minutes 8 --plan streaming
+  PYTHONPATH=src python -m repro.launch.preprocess --minutes 8 --plan async --depth 4
   PYTHONPATH=src python -m repro.launch.preprocess --plan sharded --shards 4
   PYTHONPATH=src python -m repro.launch.preprocess --plan sharded --store /data/store
   PYTHONPATH=src python -m repro.launch.preprocess --store /data/store --resume
@@ -13,11 +13,17 @@ uneven batches don't skew the fractions. The sharded plan additionally
 reports queue redeliveries and the last round's survivor re-shard loads.
 
 `--plan` choices come straight from the `PLANS` registry, so new plans
-appear here without touching this driver. `--store DIR` wraps the chosen
-plan in `CachedPlan` over a content-addressed `repro.store.ChunkStore`
-(re-runs over overlapping data become lookups) plus a `RunJournal`;
-`--resume` relaunches a killed `--store` run mid-stream with each chunk
-emitted exactly once.
+appear here without touching this driver. `--plan async` is the deep
+pipeline (`--depth` detect batches in flight, device-resident survivor
+compaction, bucketed tail shapes via `--bucket`); plans that record
+per-batch timings get a per-stage pipeline report (dispatch / mask
+readback / compact / tail / emit, overlap count, host-boundary bytes).
+`--store DIR` wraps the chosen plan in `CachedPlan` over a
+content-addressed `repro.store.ChunkStore` (re-runs over overlapping data
+become lookups) plus a `RunJournal`; `--resume` relaunches a killed
+`--store` run mid-stream with each chunk emitted exactly once;
+`--store-max-bytes` runs the store's least-recently-hit retention sweep
+after the run so a rolling archive's cache stays bounded.
 """
 from __future__ import annotations
 
@@ -46,16 +52,28 @@ def main(argv=None):
                     choices=sorted(PLANS))
     ap.add_argument("--shards", type=int, default=2,
                     help="simulated shard count for --plan sharded")
+    ap.add_argument("--depth", type=int, default=None,
+                    help="detect dispatch-ahead window for --plan async "
+                         "(default 4)")
+    ap.add_argument("--bucket", choices=("pow2", "linear"), default=None,
+                    help="survivor-count quantization for the tail jit "
+                         "(default: the plan's own — pow2 for async, "
+                         "linear elsewhere)")
     ap.add_argument("--store", default=None, metavar="DIR",
                     help="content-addressed result store: wraps the chosen "
                          "plan in CachedPlan + a resume journal")
     ap.add_argument("--resume", action="store_true",
                     help="resume a killed --store run from its journal "
                          "(exactly-once emission across the restart)")
+    ap.add_argument("--store-max-bytes", type=int, default=None,
+                    help="after the run, evict least-recently-hit store "
+                         "entries until the payload fits this budget")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.resume and not args.store:
         ap.error("--resume requires --store")
+    if args.store_max_bytes is not None and not args.store:
+        ap.error("--store-max-bytes requires --store")
 
     cfg = SERF_AUDIO
     n_batches = max(1, int(round(args.minutes / args.batch_long_chunks)))
@@ -64,6 +82,19 @@ def main(argv=None):
     sharded = args.plan == "sharded"
     rules = pool_rules(args.shards, mesh) if sharded else ShardingRules(mesh)
     plan_kwargs = {"shards": args.shards} if sharded else {}
+    if args.plan == "async":
+        plan_kwargs["depth"] = 4 if args.depth is None else args.depth
+    elif args.depth is not None:
+        ap.error(f"--depth is the async plan's dispatch-ahead window; "
+                 f"plan '{args.plan}' has no use for it")
+    if args.bucket is not None:
+        if args.plan not in ("two_phase", "streaming", "async", "cached"):
+            # sharded pads through its Rebalancer (cross-shard re-slicing
+            # has its own shape economy), fused has no tail at all
+            ap.error(f"--bucket selects the tail-shape quantization of "
+                     f"the single-stream two-phase-family plans; plan "
+                     f"'{args.plan}' does not take it")
+        plan_kwargs["bucket"] = args.bucket
     if args.store:
         # CachedPlan must see chunk content before dispatch, so even a
         # sharded inner is fed the plain stream (it builds its leased pool
@@ -91,6 +122,7 @@ def main(argv=None):
     tot_bytes = tot_kept = tot_chunks = 0
     agg = {k: 0.0 for k in _FRAC_KEYS}
     last_keep = None
+    timings = []
     t0 = time.time()
     for res in pre.run(loader):
         w = float(res.det.stats["n_chunks5"])    # weight: chunks in batch
@@ -100,6 +132,8 @@ def main(argv=None):
         tot_kept += res.n_kept
         tot_chunks += int(w)
         last_keep = res.det.keep
+        if res.timings is not None:
+            timings.append(res.timings)
     dt = time.time() - t0
     cached = pre.plan if plan == "cached" else None
     exec_plan = cached.inner if cached is not None else pre.plan
@@ -132,9 +166,56 @@ def main(argv=None):
                   f"{st['loads_after'].tolist()} "
                   f"(max/min {st['max_min_before']:.2f} -> "
                   f"{st['max_min_after']:.2f}, moved {st['moved']})")
+    if timings:
+        report = pipeline_report(timings)
+        stages = "  ".join(f"{k} {report[k + '_ms']:.2f}ms"
+                           for k in ("dispatch", "readback", "compact",
+                                     "tail", "emit"))
+        print(f"pipeline: {stages}")
+        print(f"pipeline: {report['overlapped']}/{report['batches']} "
+              f"overlapped dispatches (max in-flight "
+              f"{report['max_in_flight']}), host boundary "
+              f"{report['d2h_bytes_per_batch'] / 2**20:.2f} MB down + "
+              f"{report['h2d_bytes_per_batch'] / 2**10:.1f} KB up per "
+              f"batch (the old host-compaction round-trip moved "
+              f"{report['old_boundary_bytes_per_batch'] / 2**20:.2f} MB "
+              f"on this stream)")
     if cached is not None and cached.stats is not None:
         print(f"store: {cached.stats}")
+    if args.store_max_bytes is not None and cached is not None \
+            and cached.store is not None:
+        rep = cached.store.gc(args.store_max_bytes)
+        print(f"store gc: {rep['evicted']} entries / "
+              f"{rep['bytes_freed'] / 2**20:.1f} MB evicted -> "
+              f"{rep['entries_after']} entries / "
+              f"{rep['bytes_after'] / 2**20:.1f} MB retained")
     return tot_kept
+
+
+def pipeline_report(timings):
+    """Aggregate per-batch plan timing records into per-stage means, the
+    overlap count, and host-boundary traffic (shared by this driver and
+    benchmarks/bench_dispatch_depth.py)."""
+    n = len(timings)
+    rep = {"batches": n}
+    for k in ("dispatch", "readback", "compact", "tail", "emit"):
+        rep[k + "_ms"] = 1e3 * sum(t.get(k + "_s", 0.0)
+                                   for t in timings) / n
+    rep["overlapped"] = sum(1 for t in timings
+                            if t.get("in_flight", 1) >= 2)
+    rep["max_in_flight"] = max(t.get("in_flight", 1) for t in timings)
+    rep["d2h_bytes_per_batch"] = sum(t.get("d2h_bytes", 0)
+                                     for t in timings) / n
+    rep["h2d_bytes_per_batch"] = sum(t.get("h2d_bytes", 0)
+                                     for t in timings) / n
+    # the counterfactual: what the old host-compaction bookkeeping moved
+    # per batch on THIS stream (full wave5 + mask down, survivor batch
+    # up, cleaned down — measured per batch, not a 2x-full-batch model)
+    rep["old_boundary_bytes_per_batch"] = sum(
+        t.get("old_boundary_bytes", 0) for t in timings) / n
+    rep["full_batch_bytes"] = sum(t.get("wave5_bytes", 0)
+                                  for t in timings) / n
+    return rep
 
 
 if __name__ == "__main__":

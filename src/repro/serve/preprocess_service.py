@@ -19,6 +19,13 @@ whose exact bytes were served (or preprocessed offline) before returns
 from the store without touching a device. Batches are keyed as pumped,
 i.e. padded composition included, so recurring request groups hit;
 `cache_stats` reports the hit/miss/bytes-saved ledger.
+
+`PreprocessService(cfg, plan="async", depth=4)` serves each pumped batch
+through the device-compaction path (only the keep mask and the cleaned
+survivors cross the host boundary); the per-batch pipeline timing record
+of the most recent pump is exposed as `last_timings` so a serving loop
+can watch its readback/tail/emit latency split without instrumenting the
+plan itself.
 """
 from __future__ import annotations
 
@@ -40,6 +47,7 @@ class PreprocessService:
         self._queue = collections.deque()
         self._results = {}
         self._next_id = 0
+        self.last_timings = None   # plan timing record of the last pump
 
     def submit(self, long_chunk) -> int:
         """long_chunk: (C, S_long_src) one 60 s stereo chunk. Returns a
@@ -62,6 +70,7 @@ class PreprocessService:
         while len(chunks) < self.batch:          # pad with copies
             chunks.append(chunks[-1])
         res = self.pre(np.stack(chunks))
+        self.last_timings = res.timings
         keep = np.asarray(res.det.keep)
         rain = np.asarray(res.det.rain)
         silence = np.asarray(res.det.silence)

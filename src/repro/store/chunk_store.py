@@ -65,6 +65,8 @@ class StoreStats:
     corrupt: int = 0        # entries evicted on crc mismatch
     bytes_saved: int = 0    # source bytes whose preprocessing a hit skipped
     bytes_written: int = 0  # bytes of result payload persisted
+    gc_evicted: int = 0     # entries evicted by gc() retention sweeps
+    gc_bytes_freed: int = 0  # payload bytes those sweeps reclaimed
 
     @property
     def hit_rate(self) -> float:
@@ -76,7 +78,9 @@ class StoreStats:
                 "hit_rate": self.hit_rate, "writes": self.writes,
                 "dup_writes": self.dup_writes, "corrupt": self.corrupt,
                 "bytes_saved": self.bytes_saved,
-                "bytes_written": self.bytes_written}
+                "bytes_written": self.bytes_written,
+                "gc_evicted": self.gc_evicted,
+                "gc_bytes_freed": self.gc_bytes_freed}
 
     def __str__(self):
         return (f"hits={self.hits} misses={self.misses} "
@@ -175,11 +179,64 @@ class ChunkStore:
             return None
         self.stats.hits += 1
         self.stats.bytes_saved += int(src_bytes)
+        try:                       # recency mark for gc(): last hit wins
+            os.utime(mpath)
+        except OSError:            # read-only store: gc falls back to
+            pass                   # write order, hits still served
         return out, manifest["meta"]
 
     # -- inventory -----------------------------------------------------------
     def evict(self, key):
         shutil.rmtree(self._path(key), ignore_errors=True)
+
+    def entry_bytes(self, key) -> int:
+        """On-disk payload bytes of one entry (0 when absent)."""
+        path = self._path(key)
+        if not os.path.isdir(path):
+            return 0
+        return sum(
+            os.path.getsize(os.path.join(path, f))
+            for f in os.listdir(path)
+            if os.path.isfile(os.path.join(path, f)))
+
+    def gc(self, max_bytes) -> dict:
+        """Retention sweep: evict least-recently-HIT entries (manifest
+        mtime — refreshed on every verified read, so write order is only
+        the tie-break for never-hit entries) until the store's payload
+        fits in `max_bytes`. The paper-scale archive motivation: a rolling
+        survey stream writes results forever, but only the recent window
+        keeps re-hitting; everything older is recomputable by definition
+        (the store is a cache, not the archive of record).
+
+        Returns a stats dict: entries/bytes before and after, evicted
+        count, bytes freed. Also accumulated on `self.stats`."""
+        max_bytes = int(max_bytes)
+        ages = []
+        for key in self.keys():
+            mpath = os.path.join(self._path(key), "manifest.json")
+            try:
+                mtime = os.path.getmtime(mpath)
+            except OSError:        # raced a concurrent evict
+                continue
+            ages.append((mtime, key, self.entry_bytes(key)))
+        ages.sort()                # oldest last-hit first
+        total = sum(b for _, _, b in ages)
+        before = {"entries": len(ages), "bytes": total}
+        evicted = freed = 0
+        for _, key, nbytes in ages:
+            if total <= max_bytes:
+                break
+            self.evict(key)
+            total -= nbytes
+            freed += nbytes
+            evicted += 1
+        self.stats.gc_evicted += evicted
+        self.stats.gc_bytes_freed += freed
+        return {"entries_before": before["entries"],
+                "bytes_before": before["bytes"],
+                "evicted": evicted, "bytes_freed": freed,
+                "entries_after": before["entries"] - evicted,
+                "bytes_after": total}
 
     def keys(self):
         if not os.path.isdir(self._objects):

@@ -77,7 +77,8 @@ def test_rebalancer_split_pads_batches():
     parts = list(reb.split(surv, asg))
     assert [(j, b.shape[0], n) for j, b, n in parts] == [(0, 4, 3), (1, 4, 2)]
     np.testing.assert_array_equal(parts[0][1][:3], surv[:3])
-    np.testing.assert_array_equal(parts[0][1][3], surv[2])  # pad = last row
+    np.testing.assert_array_equal(parts[0][1][3], 0.0)  # pad = zero rows,
+    # never repeated audio (PR 4: repeated-row padding wasted MMSE flops)
 
 
 def test_rebalancer_empty():

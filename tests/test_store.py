@@ -79,6 +79,34 @@ def test_store_writes_are_atomic_no_tmp_residue(tmp_path):
     assert store.keys() == ["deadbeef"] and len(store) == 1
 
 
+def test_store_gc_evicts_least_recently_hit(tmp_path):
+    """Retention sweep: gc(max_bytes) drops the coldest entries first —
+    'cold' meaning least recently HIT (a read refreshes recency), with
+    write order the tie-break — and the survivors stay readable."""
+    store = ChunkStore(tmp_path)
+    for i in range(4):
+        store.put(f"k{i}", {"a": np.full(256, i, np.float32)})
+        # deterministic write order (same-ms writes would tie on mtime)
+        mpath = os.path.join(str(tmp_path), "objects", f"k{i}",
+                             "manifest.json")
+        os.utime(mpath, (1_000_000 + i, 1_000_000 + i))
+    per = store.entry_bytes("k0")
+    assert per > 256 * 4 // 2
+    # k0 is the oldest write but gets HIT -> recency beats write order
+    assert store.get("k0") is not None
+    rep = store.gc(max_bytes=2 * per)
+    assert rep["evicted"] == 2 and rep["bytes_freed"] == 2 * per
+    assert rep["entries_after"] == 2 and rep["bytes_after"] <= 2 * per
+    assert store.keys() == ["k0", "k3"]       # k1, k2 were coldest
+    got, _ = store.get("k0")
+    np.testing.assert_array_equal(got["a"], 0.0)
+    assert store.stats.gc_evicted == 2
+    assert store.stats.gc_bytes_freed == 2 * per
+    assert "gc_evicted" in store.stats.as_dict()
+    # a fitting store is untouched
+    assert store.gc(max_bytes=10 * per)["evicted"] == 0
+
+
 def test_store_crc_corruption_raises_then_evicts(tmp_path):
     arrays = {"x": np.arange(8, dtype=np.float32)}
     strict = ChunkStore(tmp_path)
