@@ -1,0 +1,138 @@
+"""Table 7 axis: lease batching (the paper's slave `max_queue_size`).
+
+The paper sweeps the slaves' local queue depth and finds throughput rises
+until the queue is deep enough to hide master round-trips, then flattens.
+Our twin knob is `lease_items`: work ids granted per `WorkQueue.lease`
+round-trip. This bench sweeps lease_items x shards over the SAME seeded
+synthetic stream and records, per config:
+
+  wall_s        end-to-end wall clock
+  round_trips   lease calls against the master (the cost deeper batches
+                amortize; Table 7's independent variable, inverted)
+  leased        work ids granted (== stream length + redeliveries)
+  redeliveries  lease-expiry / fail_worker re-sends (the exposure deeper
+                batches add: a dead worker strands more leases)
+  idle_s        per-worker idle seconds (proc transport: worker-reported
+                time blocked on the master; inproc: 0 by construction)
+
+Runs in-process by default (deterministic, no spawn cost — the round-trip
+count is transport-invariant because the lease protocol is the same
+object); `--transport proc` measures real processes, where round-trips
+are genuine socket RTTs and idle_s is real blocked time.
+
+  PYTHONPATH=src python -m benchmarks.bench_queue_depth [--minutes 8]
+      [--transport proc] [--shards 2,4] [--lease-items 1,2,4,8]
+
+Writes machine-readable `results/BENCH_queue_depth.json`.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.configs import SERF_AUDIO as cfg
+from repro.core.plans import Preprocessor
+from repro.data.loader import audio_batch_maker, make_shard_pool
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results",
+                   "BENCH_queue_depth.json")
+
+
+def run_config(n_batches, shards, lease_items, transport="inproc", seed=0,
+               batch_long_chunks=1):
+    make = audio_batch_maker(seed=seed,
+                             batch_long_chunks=batch_long_chunks)
+    pool = make_shard_pool(make, n_batches, shards,
+                           lease_items=lease_items, lease_timeout_s=300.0)
+    pre = Preprocessor(cfg, plan="sharded", shards=shards, pad_multiple=1,
+                       lease_items=lease_items, transport=transport)
+    t0 = time.perf_counter()
+    results = list(pre.run(pool))
+    wall = time.perf_counter() - t0
+    wids = sorted(r.wid for r in results)
+    assert wids == list(range(n_batches)), f"lost/dup chunks: {wids}"
+    stats = pre.plan.worker_stats or []
+    keep = np.concatenate(
+        [np.asarray(r.det.keep)
+         for r in sorted(results, key=lambda r: r.wid)])
+    return {
+        "shards": shards, "lease_items": lease_items,
+        "transport": transport, "n_batches": n_batches,
+        "wall_s": round(wall, 3),
+        "round_trips": int(sum(s.lease_calls for s in stats)),
+        "leased": int(sum(s.leased_total for s in stats)),
+        "redeliveries": int(pre.plan.redeliveries),
+        "idle_s": {s.worker: round(s.idle_s, 3) for s in stats},
+        "busy_s": {s.worker: round(s.busy_s, 3) for s in stats},
+        "keep_crc": int(np.packbits(keep).sum()),   # cheap parity stamp
+    }
+
+
+def run(minutes=8.0, shards=(2, 4), lease_items=(1, 2, 4, 8),
+        transport="inproc", seed=0):
+    n_batches = max(8, int(round(minutes)))
+    rows = []
+    for k in shards:
+        for li in lease_items:
+            row = run_config(n_batches, k, li, transport=transport,
+                             seed=seed)
+            rows.append(row)
+            idle = sum(row["idle_s"].values())
+            print(f"shards={k} lease_items={li}: {row['wall_s']:.2f}s, "
+                  f"{row['round_trips']} round-trips for {row['leased']} "
+                  f"ids, {row['redeliveries']} redeliveries, "
+                  f"idle {idle:.2f}s")
+    # every config must see the same survivors — the knob moves work,
+    # never values
+    crcs = {r["keep_crc"] for r in rows}
+    assert len(crcs) == 1, f"configs disagree on survivors: {crcs}"
+    findings = {}
+    for k in shards:
+        mine = {r["lease_items"]: r for r in rows if r["shards"] == k}
+        base, deep = mine[min(lease_items)], mine[max(lease_items)]
+        findings[f"shards{k}"] = {
+            f"round_trips_{min(lease_items)}": base["round_trips"],
+            f"round_trips_{max(lease_items)}": deep["round_trips"],
+            "round_trip_drop": round(
+                1.0 - deep["round_trips"] / max(base["round_trips"], 1), 3),
+            "wall_ratio": round(deep["wall_s"] / base["wall_s"], 3),
+        }
+        assert deep["round_trips"] < base["round_trips"], (
+            f"lease batching did not reduce round-trips at shards={k}: "
+            f"{base['round_trips']} -> {deep['round_trips']}")
+        print(f"shards={k}: lease_items {min(lease_items)}->"
+              f"{max(lease_items)} cuts round-trips "
+              f"{base['round_trips']} -> {deep['round_trips']} "
+              f"({findings[f'shards{k}']['round_trip_drop']:.0%}), "
+              f"wall x{findings[f'shards{k}']['wall_ratio']:.2f}")
+    out = {"bench": "queue_depth", "transport": transport,
+           "n_batches": n_batches, "rows": rows, "findings": findings}
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {os.path.normpath(OUT)}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--minutes", type=float, default=8.0,
+                    help="stream length (1 batch ~= 1 minute of audio)")
+    ap.add_argument("--transport", choices=("inproc", "proc"),
+                    default="inproc")
+    ap.add_argument("--shards", default="2,4")
+    ap.add_argument("--lease-items", default="1,2,4,8")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(minutes=args.minutes,
+        shards=tuple(int(s) for s in args.shards.split(",")),
+        lease_items=tuple(int(s) for s in args.lease_items.split(",")),
+        transport=args.transport, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,7 +19,10 @@ def smoke():
     executor regressions fail fast (scripts/verify.sh runs this). Then the
     sharded fault-tolerance gate: 2 simulated shards with a forced lease
     expiry AND a mid-stream worker crash must finish with redeliveries >= 1
-    and zero lost or duplicated chunks. Then the cache gate: the same tiny
+    and zero lost or duplicated chunks. Then the PROCESS-mode FT gate: the
+    same recovery story on 2 REAL worker processes over the proc
+    transport, one SIGKILLed mid-stream — zero lost/duplicate chunks,
+    output bit-identical to two_phase. Then the cache gate: the same tiny
     stream twice through CachedPlan over a fresh store — the second pass
     must be >= 90% hits with survivor masks bit-identical to the uncached
     reference. Then the async-pipeline gate: `--plan async --depth 4` on a
@@ -65,6 +68,11 @@ def smoke():
         failures.append("sharded-ft")
         traceback.print_exc()
     try:
+        _proc_ft_smoke(np, cfg, Preprocessor)
+    except Exception:
+        failures.append("proc-ft")
+        traceback.print_exc()
+    try:
         _cache_smoke(np, cfg, Preprocessor, stream, ref)
     except Exception:
         failures.append("cache")
@@ -74,7 +82,7 @@ def smoke():
     except Exception:
         failures.append("async-pipeline")
         traceback.print_exc()
-    n_gates = len(PLANS) + 3
+    n_gates = len(PLANS) + 4
     print(f"\nsmoke: {n_gates - len(failures)}/{n_gates} "
           f"gates OK" + (f"; FAILED: {failures}" if failures else ""))
     raise SystemExit(1 if failures else 0)
@@ -115,6 +123,45 @@ def _ft_smoke(np, cfg, Preprocessor):
     print(f"plan sharded-ft OK: wid {ghost[0]} redelivered after forced "
           f"lease expiry, shard 1 crashed, {len(wids)}/{n_batches} chunk "
           f"ids exactly once, redeliveries={pre.plan.redeliveries} "
+          f"in {time.time() - t0:.1f}s")
+
+
+def _proc_ft_smoke(np, cfg, Preprocessor):
+    """REAL-process fault-tolerance gate: 2 worker processes over the proc
+    transport, one SIGKILLed mid-stream while holding a lease; every chunk
+    id must come out exactly once, bit-identical to the in-process
+    two_phase plan, with the lost lease redelivered to the survivor."""
+    from repro.data.loader import audio_batch_maker, make_shard_pool
+    from repro.ft.failure import CrashInjector
+
+    t0 = time.time()
+    n_batches = 5
+    make = audio_batch_maker(seed=3, batch_long_chunks=2)
+    pool = make_shard_pool(make, n_batches, 2, lease_timeout_s=120.0)
+    injector = CrashInjector()
+    # after_items=0: shard1 is SIGKILLed the moment its FIRST lease is
+    # granted — deterministic under any compile-time skew (a later fuse
+    # could never burn if the other worker drained the queue first)
+    injector.kill(1, after_items=0)
+    pre = Preprocessor(cfg, plan="sharded", shards=2, pad_multiple=1,
+                       transport="proc", injector=injector)
+    results = list(pre.run(pool))
+    wids = [r.wid for r in results]
+    assert wids == list(range(n_batches)), \
+        f"lost/duplicated/misordered chunks: emitted {wids}"
+    assert pre.plan.redeliveries >= 1, "expected at least one redelivery"
+    assert injector.crashed == frozenset({1}), "shard1 was not SIGKILLed"
+    ref = Preprocessor(cfg, plan="two_phase", pad_multiple=1)
+    for r in results:
+        want = ref(make(r.wid)[0])
+        np.testing.assert_array_equal(np.asarray(r.det.keep),
+                                      np.asarray(want.det.keep))
+        np.testing.assert_array_equal(r.cleaned, want.cleaned)
+    done = {st.worker: st.chunks_done for st in pre.plan.worker_stats}
+    print(f"plan proc-ft    OK: 2 real worker processes, shard1 SIGKILLed "
+          f"holding a lease, {len(wids)}/{n_batches} chunk ids exactly "
+          f"once (per-worker {done}), redeliveries="
+          f"{pre.plan.redeliveries}, cleaned bit-identical to two_phase "
           f"in {time.time() - t0:.1f}s")
 
 
@@ -194,7 +241,7 @@ def main():
                             bench_comm, bench_config_search, bench_scaling,
                             bench_load_balance, bench_utilization,
                             bench_early_exit, bench_cache,
-                            bench_dispatch_depth)
+                            bench_dispatch_depth, bench_queue_depth)
     steps = [
         ("Table 1 / Fig 1: stage times",
          lambda: bench_stage_times.run(minutes=minutes)),
@@ -208,6 +255,9 @@ def main():
          lambda: bench_split_accuracy.run(minutes=max(6.0, minutes))),
         ("Table 7: config search",
          lambda: bench_config_search.run(hours=hours)),
+        ("Table 7: queue depth (lease batching)",
+         lambda: bench_queue_depth.run(
+             minutes=8.0 if not args.full else 16.0)),
         ("Figs 11-13: scaling", lambda: bench_scaling.run(hours=hours)),
         ("Figs 14-18: load balance",
          lambda: bench_load_balance.run(hours=hours)),

@@ -6,6 +6,10 @@
 #      sharded fault-tolerance gate — ShardedPlan over 2 simulated shards
 #      with a forced lease expiry and a mid-stream worker crash must
 #      finish with redeliveries >= 1 and zero lost/duplicated chunks —
+#      PLUS the process-mode FT gate — the same recovery on 2 REAL worker
+#      processes over the repro.dist proc transport, one SIGKILLed
+#      mid-stream while holding a lease: zero lost/duplicate chunks,
+#      output bit-identical to two_phase —
 #      PLUS the cache gate — the same tiny stream twice through
 #      CachedPlan over a fresh store: the second pass must be >= 90%
 #      cache hits with survivor masks bit-identical to the uncached plan —

@@ -35,18 +35,45 @@ the execution strategy. Six plans, and when to pick each:
                       mask readback on one device — go deeper only when
                       emission jitter (a slow consumer) must also be
                       absorbed. Emission order is ALWAYS input order.
-  * `ShardedPlan`   — the multi-shard execution backbone: per-shard
-                      `ShardedLoader`s pull leased work ids from ONE shared
-                      `WorkQueue` (at-least-once redelivery on lease expiry
-                      replaces the paper's crash-tracking master), and
-                      between detection and MMSE a `Rebalancer` re-assigns
-                      survivors across shards (the paper's Figs 14-16 even-
-                      load claim, kept true under skewed noise regimes).
-                      Completion gates emission, so output stays exactly-
-                      once on top of at-least-once delivery; a worker crash
-                      mid-stream resumes from queue state with no lost or
-                      duplicated chunks. Pick for multi-host / multi-worker
-                      runs, or whenever fault tolerance matters.
+  * `ShardedPlan`   — the multi-shard execution backbone, now a thin
+                      MASTER over a pluggable transport: the shared leased
+                      `WorkQueue` is served behind a `repro.dist.
+                      QueueService` (lease / complete / heartbeat /
+                      fail_worker / state + the fetch/push data planes),
+                      and the workers that pull from it are picked by
+                      `transport=`:
+
+                        transport   workers                 use when
+                        ---------   ---------------------   -----------------
+                        "inproc"    simulated loop itera-   tests, single
+                                    tions in this process   host, determinism
+                                    (the historical mode,   (the default)
+                                    preserved bit-for-bit)
+                        "proc"      real OS processes        real parallelism
+                                    (`python -m repro.       + fault isolation;
+                                    dist.worker`), pickled   SIGKILL a worker
+                                    messages over authen-    and the stream
+                                    ticated localhost        still emits each
+                                    sockets                  chunk exactly once
+
+                      Workers lease work ids in batches (`lease_items`,
+                      the paper's Table 7 `max_queue_size` knob —
+                      amortizes queue round-trips against redelivery
+                      exposure), at-least-once redelivery on lease expiry
+                      or `fail_worker` replaces the paper's crash-tracking
+                      master, the `Rebalancer` owns the detection->MMSE
+                      survivor re-shard (in-proc: physically re-slices;
+                      proc: the per-round load ledger of the paper's Figs
+                      14-16), and completion gates emission so output
+                      stays exactly-once on top of at-least-once delivery.
+                      Emission order: ascending work id under "proc" (==
+                      the crash-free in-proc order); `worker_stats` holds
+                      the per-worker progress report of the last run.
+                      Single-batch `__call__` (the serve path) always
+                      row-splits in-process — spawning processes per
+                      request is not a serving latency anyone wants. Pick
+                      for multi-worker runs, or whenever fault tolerance
+                      matters.
   * `CachedPlan`    — content-addressed persistence around ANY inner plan
                       (including the sharded one): the `repro.store`
                       ChunkStore is consulted before dispatch, only misses
@@ -75,6 +102,7 @@ from __future__ import annotations
 import collections
 import operator
 import os
+import threading
 import time
 from dataclasses import dataclass, field, replace
 
@@ -87,6 +115,8 @@ from repro.core.graph import (GraphValidationError, PipelineGraph,
                               PipelineOutput)
 from repro.data.loader import ShardedLoader, make_shard_pool
 from repro.data.queue import WorkQueue
+from repro.dist.service import QueueService, pack_result, unpack_result
+from repro.dist.transport import ProcTransport
 from repro.distributed.sharding import NULL_RULES
 from repro.kernels import backend
 from repro.store import ChunkStore, RunJournal, content_key
@@ -436,9 +466,13 @@ class StreamingPlan(AsyncPlan):
 
 
 class ShardedPlan(TwoPhasePlan):
-    """Fault-tolerant multi-shard execution over a shared leased WorkQueue.
+    """Fault-tolerant multi-shard execution over a shared leased WorkQueue,
+    served by this plan (the MASTER) to its workers over a pluggable
+    transport (`repro.dist`).
 
-    The round loop (one round = every live shard pulls up to lease_items):
+    In-proc mode — the historical simulated round loop (one round = every
+    live shard pulls up to lease_items), every queue mutation routed
+    through the `QueueService` so progress accounting matches proc mode:
 
       pull    each live shard leases work ids from the SHARED queue and
               dispatches detection under its own rules/mesh; a scripted
@@ -454,15 +488,28 @@ class ShardedPlan(TwoPhasePlan):
               ids; `queue.complete` gates emission so each work id is
               emitted exactly once even when redelivery raced a straggler.
 
+    Proc mode — real worker processes (`repro.dist.worker`) lease in
+    batches over the transport, fetch chunk bytes from the master, run the
+    exact TwoPhasePlan detect+tail locally, and stream results back; the
+    master completes each returned work id (exactly-once gate), runs the
+    Rebalancer on the returned masks per drain (the paper's Figs 14-16
+    load ledger), emits in ascending work-id order, SIGKILLs armed by the
+    `CrashInjector` land on real pids, and dead processes are reclaimed
+    via `fail_worker` (fast path) or lease expiry (slow path).
+
     `rules` may be a single ShardingRules (shared mesh) or one per shard
     (`distributed.sharding.pool_rules`); compiles land in the shared
-    CompileCache keyed by each shard's value fingerprint.
+    CompileCache keyed by each shard's value fingerprint. (Proc workers
+    compile in their own processes — per-host meshes are the multi-host
+    TCP future, not this transport.)
     """
     name = "sharded"
     accepts_rules_pool = True
 
     def __init__(self, graph, rules=NULL_RULES, pad_multiple=1, shards=2,
-                 lease_items=1, injector=None, monitor=None):
+                 lease_items=1, injector=None, monitor=None,
+                 transport="inproc", worker_poll_s=0.05,
+                 stall_timeout_s=300.0, lease_timeout_s=None):
         self.shards = max(1, int(shards))
         if isinstance(rules, (list, tuple)):
             if len(rules) != self.shards:
@@ -474,13 +521,36 @@ class ShardedPlan(TwoPhasePlan):
             pool = (rules,) * self.shards
         super().__init__(graph, pool[0], pad_multiple)
         self.rules_pool = pool
-        self.lease_items = lease_items
+        self.lease_items = max(1, int(lease_items))
         self.injector = injector
         self.monitor = monitor
+        self.transport = transport
+        self.worker_poll_s = float(worker_poll_s)
+        self.stall_timeout_s = float(stall_timeout_s)
+        # lease deadline for the plan's INTERNAL queue (plain-stream runs;
+        # a user-supplied pool brings its own queue). None = transport-
+        # sensible default: proc workers pay a first-item jit compile
+        # (~minute on CPU), so a healthy compiling worker must not blow
+        # its deadline; the simulated loop keeps the WorkQueue default.
+        self.lease_timeout_s = lease_timeout_s
+        self._transport_kind()          # validate early, not mid-stream
         self.rebalancer = SCHED.Rebalancer(self.shards, pad_multiple)
         self.redeliveries = 0           # mirrored off the queue after run()
         self.last_assignment = None     # last round's ShardAssignment
+        self.worker_stats = None        # per-worker report of the last run
         self._release = None            # stream-item drop hook (see run())
+
+    def _transport_kind(self) -> str:
+        t = self.transport
+        if isinstance(t, str):
+            if t not in ("inproc", "proc"):
+                raise ValueError(f"unknown transport {t!r} "
+                                 "(expected 'inproc' or 'proc')")
+            return t
+        kind = getattr(t, "name", None)
+        if kind not in ("inproc", "proc"):
+            raise ValueError(f"transport object {t!r} names no known kind")
+        return kind
 
     # -- per-shard phase dispatch (shared CompileCache, per-shard rules) ----
     def _detect_on(self, shard, audio):
@@ -544,16 +614,22 @@ class ShardedPlan(TwoPhasePlan):
             drained = list(it)
             n, it = len(drained), iter(drained)
         store, cursor = {}, [0]
+        draw = threading.Lock()    # proc fetches come from handler threads
 
         def make(i):
-            while cursor[0] <= i:
-                wid, chunks, extra = next(it)
-                store[cursor[0]] = (chunks, _StreamMeta(wid, extra))
-                cursor[0] += 1
-            return store[i]
+            with draw:
+                while cursor[0] <= i:
+                    wid, chunks, extra = next(it)
+                    store[cursor[0]] = (chunks, _StreamMeta(wid, extra))
+                    cursor[0] += 1
+                return store[i]
 
+        timeout = self.lease_timeout_s
+        if timeout is None:
+            timeout = 300.0 if self._transport_kind() == "proc" else 60.0
         pool = make_shard_pool(make, n, self.shards,
-                               lease_items=self.lease_items)
+                               lease_items=self.lease_items,
+                               lease_timeout_s=timeout)
         self._release = store.pop
         try:
             yield from self.run_pool(pool)
@@ -572,47 +648,219 @@ class ShardedPlan(TwoPhasePlan):
             raise ValueError(
                 f"pool shard ids {bad} out of range for a "
                 f"{self.shards}-shard plan")
-        stalls = 0
-        while not queue.finished:
-            round_work = []          # (shard, wid, det, extra, nbytes)
-            for ld in pool:
-                if not self._alive(ld.shard):
+        if self._transport_kind() == "proc":
+            yield from self._run_proc(pool, queue)
+        else:
+            yield from self._run_sim(pool, queue)
+
+    # -- in-proc master: the historical simulated round loop ----------------
+    def _run_sim(self, pool, queue):
+        service = QueueService(queue, monitor=self.monitor)
+        # every queue mutation flows through the service (pure delegation
+        # under the queue's own lock, so behavior is bit-for-bit the old
+        # direct path) and the per-worker ledger accrues as in proc mode
+        for ld in pool:
+            ld.queue = service
+        try:
+            stalls = 0
+            while not service.finished:
+                round_work = []      # (shard, wid, det, extra, nbytes)
+                for ld in pool:
+                    if not self._alive(ld.shard):
+                        continue
+                    # one beat per live shard per round (note_beat also
+                    # forwards to the attached HeartbeatMonitor) — the
+                    # historical liveness cadence, through the service
+                    service.note_beat(ld.worker)
+                    for wid, item in ld.pull():
+                        if self.injector is not None and \
+                                not self.injector.on_pull(ld.shard):
+                            break    # died holding this lease
+                        chunks, extra = item if isinstance(item, tuple) \
+                            else (item, None)
+                        x = jnp.asarray(chunks)
+                        det = self._detect_on(ld.shard, x)  # async dispatch
+                        round_work.append((ld.shard, wid, det, extra,
+                                           int(x.nbytes)))
+                if round_work:
+                    stalls = 0
+                    yield from self._finish_round(service, round_work)
                     continue
-                if self.monitor is not None:
-                    self.monitor.beat(ld.worker)
-                for wid, item in ld.pull():
-                    if self.injector is not None and \
-                            not self.injector.on_pull(ld.shard):
-                        break        # died holding this lease
-                    chunks, extra = item if isinstance(item, tuple) \
-                        else (item, None)
-                    x = jnp.asarray(chunks)
-                    det = self._detect_on(ld.shard, x)   # async dispatch
-                    round_work.append((ld.shard, wid, det, extra,
-                                       int(x.nbytes)))
-            if round_work:
-                stalls = 0
-                yield from self._finish_round(queue, round_work)
-                continue
-            if self._reclaim(queue, pool) or queue.finished:
-                continue
-            deadline = queue.next_deadline()
-            stalls += 1
-            if deadline is not None and stalls <= 8 and \
-                    any(self._alive(ld.shard) for ld in pool):
-                # a lease nothing declared dead is still ticking (a worker
-                # outside this pool, or an undetected death): wait out the
-                # deadline so the next pull reaps and redelivers it. Only
-                # wall clocks advance while we sleep; injected clocks
-                # (SettableClock etc.) re-poll and hit the stall cap fast.
-                if queue.clock in (time.monotonic, time.time):
-                    time.sleep(max(0.0, min(deadline - queue.clock(),
-                                            queue.lease_timeout_s)) + 1e-3)
-                continue
-            raise RuntimeError(
-                "sharded plan stalled: work is leased but no live shard "
-                f"can make progress (progress {queue.progress()})")
+                if self._reclaim(service, pool) or service.finished:
+                    continue
+                deadline = service.next_deadline()
+                stalls += 1
+                if deadline is not None and stalls <= 8 and \
+                        any(self._alive(ld.shard) for ld in pool):
+                    # a lease nothing declared dead is still ticking (a
+                    # worker outside this pool, or an undetected death):
+                    # wait out the deadline so the next pull reaps and
+                    # redelivers it. Only wall clocks advance while we
+                    # sleep; injected clocks (SettableClock etc.) re-poll
+                    # and hit the stall cap fast.
+                    if queue.clock in (time.monotonic, time.time):
+                        time.sleep(max(0.0, min(deadline - queue.clock(),
+                                                queue.lease_timeout_s))
+                                   + 1e-3)
+                    continue
+                raise RuntimeError(
+                    "sharded plan stalled: work is leased but no live "
+                    f"shard can make progress (progress "
+                    f"{service.progress()})")
+        finally:
+            for ld in pool:
+                ld.queue = queue
         self.redeliveries = queue.redeliveries
+        self.worker_stats = service.worker_report()
+
+    # -- proc master: real worker processes over the transport --------------
+    def _proc_setup(self):
+        """The picklable blob workers rebuild their jits from — value
+        identity only (config, stage names, pad/bucket, backend mode), the
+        same facts the CompileCache keys on."""
+        return {"cfg": self.graph.cfg, "stages": list(self.graph.names),
+                "source_channels": self.graph.source_geom.channels,
+                "pad_multiple": self.pad_multiple, "bucket": self.bucket,
+                "backend_mode": backend.get_mode()}
+
+    def _run_proc(self, pool, queue):
+        make_item = pool[0].make_item
+        extras = {}                 # wid -> labels/_StreamMeta, master-side
+
+        def fetch(wid):
+            """Data plane: materialise the batch on the master, ship ONLY
+            the chunk bytes — labels stay here for emission. A fetch whose
+            redelivered lease lost the race to a straggler's completion
+            gets None (the item may already be emitted AND released from
+            the stream buffer): the worker skips it, nothing recomputes."""
+            if queue.is_done(wid):
+                return None
+            try:
+                item = make_item(wid)
+            except KeyError:
+                # completed + released between the is_done check and the
+                # buffer read — same race, same answer
+                if queue.is_done(wid):
+                    return None
+                raise
+            chunks, extra = item if isinstance(item, tuple) \
+                else (item, None)
+            extras[wid] = extra
+            return np.asarray(chunks, np.float32)
+
+        service = QueueService(queue, fetch_item=fetch,
+                               setup=self._proc_setup(),
+                               monitor=self.monitor)
+        tp = self.transport if not isinstance(self.transport, str) \
+            else ProcTransport()
+        handles = {}
+        if self.injector is not None:
+            def on_grant(worker, wid):
+                # the real-process CrashInjector trigger: a doomed shard
+                # is SIGKILLed the moment its fatal lease is granted, so
+                # it dies HOLDING the lease (attach() below arms the pid)
+                shard = service.workers[worker].shard
+                self.injector.on_pull(shard)
+            service.on_grant = on_grant
+        snap = queue.state()
+        order = [i for i in range(snap["n_items"])
+                 if i not in set(snap["done"])]
+        try:
+            tp.serve(service)
+            for k in range(self.shards):
+                h = tp.spawn_worker(k, lease_items=self.lease_items,
+                                    poll_s=self.worker_poll_s)
+                handles[k] = h
+                if self.injector is not None:
+                    self.injector.attach(k, h.pid)
+            yield from self._proc_emit_loop(service, queue, handles,
+                                            extras, order)
+            # the queue is drained: give workers a moment to observe
+            # `finished` and sign off (bye carries their idle/busy split)
+            deadline = time.monotonic() + 5.0
+            for h in handles.values():
+                try:
+                    h.proc.wait(max(0.0, deadline - time.monotonic()))
+                except Exception:
+                    pass
+        finally:
+            for h in handles.values():
+                h.shutdown()
+            tp.close()
+        self.redeliveries = queue.redeliveries
+        self.worker_stats = service.worker_report()
+
+    def _proc_emit_loop(self, service, queue, handles, extras, order):
+        """Drain worker results, gate on completion (exactly-once), emit
+        in ascending work-id order (== the crash-free in-proc order, so
+        transports are emission-order-identical), and reclaim dead worker
+        processes fast via fail_worker."""
+        buffered = {}
+        emit_i = 0
+        reclaimed = set()
+        last_progress = time.monotonic()
+        while emit_i < len(order):
+            drained = service.pop_results()
+            if drained:
+                last_progress = time.monotonic()
+                self._note_assignment(service, drained)
+            for worker, wid, payload in drained:
+                if not queue.complete([wid]):
+                    continue        # redelivery raced a straggler
+                service.note_done(worker)    # accepted == counted
+                buffered[wid] = unpack_result(payload)
+            progressed = bool(drained)
+            while emit_i < len(order) and order[emit_i] in buffered:
+                wid = order[emit_i]
+                emit_i += 1
+                det, f = buffered.pop(wid)
+                if self._release is not None:
+                    self._release(wid, None)
+                extra = extras.pop(wid, None)
+                orig_wid, labels = (extra.wid, extra.labels) \
+                    if isinstance(extra, _StreamMeta) else (wid, extra)
+                yield BatchResult(cleaned=f["cleaned"], det=det,
+                                  n_kept=f["n_kept"], wid=orig_wid,
+                                  labels=labels, src_bytes=f["src_bytes"])
+            if emit_i >= len(order) or progressed:
+                continue
+            # no progress this tick: look for dead workers to reclaim
+            for k, h in handles.items():
+                if k not in reclaimed and h.poll() is not None \
+                        and not queue.finished:
+                    reclaimed.add(k)
+                    queue.fail_worker(h.worker)
+            if self.monitor is not None:
+                for w in sorted(set(self.monitor.dead())):
+                    queue.fail_worker(w)
+            if all(h.poll() is not None for h in handles.values()) \
+                    and not queue.finished:
+                raise RuntimeError(
+                    "sharded plan stalled: every worker process exited "
+                    f"with work outstanding (progress {queue.progress()})")
+            if time.monotonic() - last_progress > self.stall_timeout_s:
+                raise RuntimeError(
+                    f"sharded plan stalled: no worker progress for "
+                    f"{self.stall_timeout_s:.0f}s "
+                    f"(progress {queue.progress()})")
+            time.sleep(0.01)
+
+    def _note_assignment(self, service, drained):
+        """The paper's Figs 14-16 ledger under proc mode: run the
+        Rebalancer on the masks this drain returned, grouped per source
+        shard. No data moves — workers already denoised their own leases —
+        but the would-be re-shard (loads before/after, moved count) is the
+        measurement the driver reports."""
+        by_shard = {}
+        for worker, wid, payload in drained:
+            st = service.workers.get(worker)
+            shard = st.shard if st is not None else -1
+            by_shard.setdefault(shard, []).append(
+                np.asarray(payload["keep"]))
+        keeps = [np.concatenate(v) for _, v in sorted(by_shard.items())]
+        if keeps:
+            self.last_assignment = self.rebalancer.assign(
+                keeps, out_shards=len(keeps))
 
     def _alive(self, shard):
         return self.injector is None or self.injector.alive(shard)
@@ -630,7 +878,7 @@ class ShardedPlan(TwoPhasePlan):
             got += len(queue.fail_worker(w))
         return got > 0
 
-    def _finish_round(self, queue, round_work):
+    def _finish_round(self, service, round_work):
         """Rebalanced phase B for one round, then exactly-once emission in
         work-id completion order."""
         live = sorted({s for s, *_ in round_work})
@@ -646,8 +894,9 @@ class ShardedPlan(TwoPhasePlan):
         offs = np.concatenate(
             [[0], np.cumsum([k.sum() for _, k in item_wk])]).astype(int)
         for i, (shard, wid, det, extra, nbytes) in enumerate(round_work):
-            if not queue.complete([wid]):
+            if not service.complete([wid]):
                 continue             # redelivery raced a straggler: emitted once
+            service.note_done(f"shard{shard}")
             if self._release is not None:
                 self._release(wid, None)     # drop the buffered stream item
             orig_wid, labels = (extra.wid, extra.labels) \
@@ -747,34 +996,25 @@ class CachedPlan(ExecutionPlan):
         return content_key(chunks_np, self.graph.fingerprint,
                            backend.get_mode())
 
+    # one codec for "masks + stats + cleaned, wave5 reduced to its width":
+    # repro.dist's pack_result/unpack_result — the store entry and the
+    # worker result payload are the SAME shape, so a new detector output
+    # is added in exactly one place (the array/meta split is derived by
+    # type, never by a key list that could drift from the codec)
+
     def _entry(self, res: BatchResult):
-        det = res.det
-        arrays = {
-            "cleaned": np.asarray(res.cleaned, np.float32),
-            "keep": np.asarray(det.keep), "rain": np.asarray(det.rain),
-            "silence": np.asarray(det.silence),
-            "cicada15": np.asarray(det.cicada15),
-        }
-        stats = {k: (int(v) if k == "n_chunks5" else float(v))
-                 for k, v in det.stats.items()}
-        meta = {"stats": stats, "n_kept": int(res.n_kept),
-                "src_bytes": int(res.src_bytes),
-                # shape comes off the aval — no device->host transfer of
-                # the full wave5 (which a donating tail may have consumed)
-                "wave_width": int(det.wave5.shape[-1])}
+        p = pack_result(res)
+        arrays = {k: v for k, v in p.items()
+                  if isinstance(v, np.ndarray)}
+        meta = {k: v for k, v in p.items()
+                if not isinstance(v, np.ndarray)}
         return arrays, meta
 
     def _result(self, arrays, meta, wid, extra) -> BatchResult:
-        keep = arrays["keep"]
-        wave5 = np.zeros((keep.shape[0], int(meta["wave_width"])),
-                         np.float32)
-        det = PipelineOutput(wave5=wave5, keep=keep, rain=arrays["rain"],
-                             silence=arrays["silence"],
-                             cicada15=arrays["cicada15"],
-                             stats=dict(meta["stats"]))
-        return BatchResult(cleaned=arrays["cleaned"], det=det,
-                           n_kept=int(meta["n_kept"]), wid=wid,
-                           labels=extra, src_bytes=int(meta["src_bytes"]))
+        det, f = unpack_result({**arrays, **meta})
+        return BatchResult(cleaned=f["cleaned"], det=det,
+                           n_kept=f["n_kept"], wid=wid, labels=extra,
+                           src_bytes=f["src_bytes"])
 
     # -- single batch (the warm-cache serving path) -------------------------
     def __call__(self, audio) -> BatchResult:

@@ -11,7 +11,10 @@ scheduling, not the payload):
     (the paper's slave pull loop). Completion is left to the CONSUMER (the
     execution plan), so a shard that dies after pulling leaves its lease to
     expire and the queue redelivers — at-least-once, no crash-tracking
-    master.
+    master. Its `lease_items` is the paper's Table 7 `max_queue_size` knob:
+    ids leased per round-trip — the same knob real worker processes
+    (`repro.dist.worker --lease-items`) sweep, and
+    `benchmarks/bench_queue_depth.py` measures.
 
 Prefetch depth == the paper's slave queue size (Table 7 sweeps it). The
 cursor (next work id + RNG seed) rides in checkpoint meta for exact resume.

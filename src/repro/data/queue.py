@@ -10,9 +10,17 @@ deadlines); completed leases retire work; expired leases (crash, straggler)
 return work to the queue automatically. The queue state is tiny and is
 checkpointed with the training state (ckpt meta), so a restart resumes the
 exact stream — no loss, no duplication beyond at-least-once redelivery.
+
+Every mutating entry point takes `self.lock` (an RLock), because the queue
+is now served to REAL worker processes by `repro.dist`: each transport
+connection gets its own handler thread on the master, so lease/complete/
+fail_worker race unless serialized here. Single-threaded in-process users
+pay one uncontended RLock acquire per call — noise.
 """
 from __future__ import annotations
 
+import collections
+import threading
 import time
 from dataclasses import dataclass, field
 
@@ -46,54 +54,77 @@ class WorkQueue:
         self.n_items = n_items
         self.lease_timeout_s = lease_timeout_s
         self.clock = clock
+        self.lock = threading.RLock()
         self._pending = list(range(n_items - 1, -1, -1))   # stack, pop() = 0..
         self._leases: dict[int, Lease] = {}
         self._done = set()
         self.redeliveries = 0
+        # per-worker attribution of lost leases (expiry or fail_worker):
+        # who HELD the lease that had to be redelivered — the launch
+        # driver's per-worker summary reads this.
+        self.redelivered_from = collections.Counter()
 
     # -- worker API ---------------------------------------------------------
     def lease(self, worker, max_items=1):
-        """Lease up to max_items work ids (the slave's pull request).
+        """Lease up to max_items work ids (the slave's pull request —
+        max_items is the paper's Table 7 queue-size knob).
 
         Ids completed late — after their expired lease was already reaped
         back into pending — are dropped here instead of re-delivered, so a
         straggler that finishes just past its deadline costs nothing."""
-        self._reap_expired()
-        out = []
-        while self._pending and len(out) < max_items:
-            wid = self._pending.pop()
-            if wid in self._done:
-                continue
-            self._leases[wid] = Lease(wid, worker,
-                                      self.clock() + self.lease_timeout_s)
-            out.append(wid)
-        return out
+        with self.lock:
+            self._reap_expired()
+            out = []
+            while self._pending and len(out) < max_items:
+                wid = self._pending.pop()
+                if wid in self._done:
+                    continue
+                self._leases[wid] = Lease(wid, worker,
+                                          self.clock() + self.lease_timeout_s)
+                out.append(wid)
+            return out
 
     def complete(self, work_ids):
         """Retire work ids. Returns the ids that were NEWLY retired: a late
         completion of already-done work (the at-least-once overlap) comes
         back empty, so callers can gate result emission on it and keep
         exactly-once output on top of at-least-once delivery."""
-        newly = []
-        for wid in work_ids:
-            if wid in self._done:
-                continue
-            self._leases.pop(wid, None)
-            self._done.add(wid)
-            newly.append(wid)
-        return newly
+        with self.lock:
+            newly = []
+            for wid in work_ids:
+                if wid in self._done:
+                    continue
+                self._leases.pop(wid, None)
+                self._done.add(wid)
+                newly.append(wid)
+            return newly
 
     def heartbeat_extend(self, worker):
-        now = self.clock()
-        for lease in self._leases.values():
-            if lease.worker == worker:
-                lease.deadline = now + self.lease_timeout_s
+        with self.lock:
+            now = self.clock()
+            for lease in self._leases.values():
+                if lease.worker == worker:
+                    lease.deadline = now + self.lease_timeout_s
+
+    def leases_held(self, worker):
+        """Work ids currently leased by `worker` (progress reporting)."""
+        with self.lock:
+            return sorted(wid for wid, l in self._leases.items()
+                          if l.worker == worker)
+
+    def is_done(self, wid) -> bool:
+        """True once `wid` is retired — lets a data plane refuse to serve
+        (or regenerate) an item whose redelivered lease lost the race to a
+        straggler's completion."""
+        with self.lock:
+            return wid in self._done
 
     # -- failure handling ---------------------------------------------------
     def _reap_expired(self):
         now = self.clock()
         expired = [wid for wid, l in self._leases.items() if l.deadline < now]
         for wid in expired:
+            self.redelivered_from[self._leases[wid].worker] += 1
             del self._leases[wid]
             self._pending.append(wid)
             self.redeliveries += 1
@@ -102,16 +133,21 @@ class WorkQueue:
         """Earliest outstanding lease deadline (None when nothing is
         leased) — lets a stalled consumer wait out exactly the time until
         the next reap can make progress."""
-        return min((l.deadline for l in self._leases.values()), default=None)
+        with self.lock:
+            return min((l.deadline for l in self._leases.values()),
+                       default=None)
 
     def fail_worker(self, worker):
         """Immediately return a dead worker's leases (heartbeat said dead)."""
-        back = [wid for wid, l in self._leases.items() if l.worker == worker]
-        for wid in back:
-            del self._leases[wid]
-            self._pending.append(wid)
-            self.redeliveries += 1
-        return back
+        with self.lock:
+            back = [wid for wid, l in self._leases.items()
+                    if l.worker == worker]
+            for wid in back:
+                del self._leases[wid]
+                self._pending.append(wid)
+                self.redeliveries += 1
+            self.redelivered_from[worker] += len(back)
+            return back
 
     # -- checkpoint ---------------------------------------------------------
     def state(self):
@@ -119,9 +155,10 @@ class WorkQueue:
         snapshot time. Leased ids are recorded so a journal shows what was
         in flight when the process died; on restore they re-enter pending
         (their lease holder died with the process)."""
-        self._reap_expired()
-        return {"n_items": self.n_items, "done": sorted(self._done),
-                "leased": sorted(self._leases)}
+        with self.lock:
+            self._reap_expired()
+            return {"n_items": self.n_items, "done": sorted(self._done),
+                    "leased": sorted(self._leases)}
 
     @classmethod
     def from_state(cls, state, **kw):
@@ -137,7 +174,9 @@ class WorkQueue:
 
     @property
     def finished(self):
-        return len(self._done) == self.n_items
+        with self.lock:
+            return len(self._done) == self.n_items
 
     def progress(self):
-        return len(self._done), self.n_items
+        with self.lock:
+            return len(self._done), self.n_items

@@ -1,0 +1,25 @@
+"""repro.dist — the master/worker runtime behind the multi-shard plans.
+
+Three pieces, three files:
+
+  * `service.QueueService` — the master's RPC surface over one shared
+    `data.queue.WorkQueue` (lease / complete / heartbeat / fail_worker /
+    state) plus the data plane (fetch a chunk batch, push a result) and
+    per-worker progress accounting.
+  * `transport` — how that surface is reached: `InProcTransport` (direct
+    calls, the simulated single-process mode `ShardedPlan` always had) and
+    `ProcTransport` (pickled messages over authenticated localhost
+    sockets, real OS worker processes spawned via
+    `python -m repro.dist.worker`).
+  * `worker` — the worker runtime: owns its shard's jits, pulls leases in
+    batches (`--lease-items`, the paper's Table 7 queue-size knob), runs
+    detect+tail locally, streams results back, heartbeats.
+"""
+from repro.dist.service import (QueueService, WorkerStats, pack_result,
+                                unpack_result)
+from repro.dist.transport import (InProcTransport, ProcTransport,
+                                  RemoteError, WorkerHandle)
+
+__all__ = ["QueueService", "WorkerStats", "pack_result", "unpack_result",
+           "InProcTransport", "ProcTransport", "RemoteError",
+           "WorkerHandle"]

@@ -1,0 +1,292 @@
+"""QueueService: the master's serviceable surface over one shared WorkQueue.
+
+The paper's master owns three things: the file list (here: the leased
+`WorkQueue`), the data hand-off to slaves (here: `fetch`), and the result
+collection that gates what counts as done (here: `push_result` + the
+master-side `pop_results` drain). `QueueService` packages exactly that as a
+set of named methods a transport can serve — `RPC_METHODS` is the whole
+wire surface, nothing else on the object is reachable remotely.
+
+It also DUCK-TYPES the WorkQueue it wraps (lease / complete /
+heartbeat_extend / fail_worker / state / next_deadline / progress /
+finished / clock / lease_timeout_s / redeliveries), so the in-process
+simulated path can route every queue mutation through the service and the
+per-worker accounting accrues identically under both transports. All
+compound operations take the queue's own RLock, so N transport handler
+threads and the master loop interleave safely.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.graph import PipelineOutput
+
+# The complete remote surface. A transport must refuse anything else —
+# the service object carries master-side state (result inbox, kill hooks)
+# that workers have no business reaching.
+RPC_METHODS = frozenset({
+    "hello", "lease", "fetch", "fetch_many", "complete", "push_result",
+    "heartbeat", "fail_worker", "state", "progress", "finished",
+    "next_deadline", "bye",
+})
+
+
+@dataclass
+class WorkerStats:
+    """Per-worker progress ledger (the launch driver's end-of-run summary).
+
+    `leases_held` / `redeliveries` / `last_beat_age_s` are filled in by
+    `QueueService.worker_report()` at snapshot time; the rest accrue as the
+    worker talks to the service."""
+    worker: str
+    shard: int = -1
+    pid: int = None
+    lease_calls: int = 0            # queue round-trips (Table 7's axis)
+    leased_total: int = 0           # work ids ever granted
+    chunks_done: int = 0            # results ACCEPTED by the master (the
+                                    # completion gate, not raw pushes — a
+                                    # redelivery race's duplicate push is
+                                    # not work done)
+    idle_s: float = 0.0             # worker-reported: blocked on the queue
+    busy_s: float = 0.0             # worker-reported: computing
+    last_beat: float = field(default=None, repr=False)
+    # snapshot-time fields (worker_report):
+    leases_held: int = 0
+    redeliveries: int = 0
+    last_beat_age_s: float = None
+
+
+class QueueService:
+    """Master-side service: the WorkQueue plus the data/result planes.
+
+    Parameters:
+      queue       the shared WorkQueue (its RLock serializes everything)
+      fetch_item  wid -> chunk batch (np.ndarray) — the data plane; the
+                  master materialises/regenerates the bytes, workers never
+                  see the loader (the paper's master hands slaves files)
+      setup       picklable blob returned from `hello` — everything a
+                  worker needs to build its jits (cfg, stage names,
+                  pad_multiple, bucket, kernel backend mode)
+      monitor     optional ft.failure.HeartbeatMonitor fed on heartbeats
+    """
+
+    def __init__(self, queue, fetch_item=None, setup=None, monitor=None):
+        self.queue = queue
+        self._fetch_item = fetch_item
+        self._setup = dict(setup or {})
+        self.monitor = monitor
+        self.workers: dict[str, WorkerStats] = {}
+        self.lease_calls = 0
+        self._results = collections.deque()
+        # master-side hook, called INSIDE lease() once per granted work id
+        # with (worker, wid): the CrashInjector's process-mode trigger — a
+        # doomed worker is SIGKILLed while its fresh lease is registered
+        # and un-completed, so recovery exercises the real redelivery path.
+        self.on_grant = None
+
+    # -- bookkeeping --------------------------------------------------------
+    def _w(self, worker) -> WorkerStats:
+        st = self.workers.get(worker)
+        if st is None:
+            st = self.workers[worker] = WorkerStats(worker)
+        return st
+
+    def note_beat(self, worker):
+        """Record liveness WITHOUT extending lease deadlines (the simulated
+        in-process path beats once per round; extending there would change
+        redelivery timing, which the proc path deliberately does via
+        `heartbeat`)."""
+        with self.queue.lock:
+            self._w(worker).last_beat = self.queue.clock()
+        if self.monitor is not None:
+            self.monitor.beat(worker)
+
+    def note_done(self, worker, n=1):
+        with self.queue.lock:
+            self._w(worker).chunks_done += n
+
+    # -- RPC surface --------------------------------------------------------
+    def hello(self, worker, pid=None, shard=-1):
+        """Worker sign-in: registers identity, returns the setup blob."""
+        with self.queue.lock:
+            st = self._w(worker)
+            st.pid, st.shard = pid, int(shard)
+            st.last_beat = self.queue.clock()
+        return self._setup
+
+    def lease(self, worker, max_items=1):
+        with self.queue.lock:
+            ids = self.queue.lease(worker, max_items)
+            st = self._w(worker)
+            st.lease_calls += 1
+            st.leased_total += len(ids)
+            st.last_beat = self.queue.clock()
+            self.lease_calls += 1
+        if self.monitor is not None:
+            self.monitor.beat(worker)
+        hook = self.on_grant
+        if hook is not None:
+            for wid in ids:
+                hook(worker, wid)
+        return ids
+
+    def fetch(self, wid):
+        """Data plane: the chunk batch for one leased work id."""
+        if self._fetch_item is None:
+            raise RuntimeError("this QueueService serves no data plane "
+                               "(no fetch_item)")
+        return self._fetch_item(wid)
+
+    def fetch_many(self, worker, wids):
+        """Batched data plane: one round-trip for a whole lease batch
+        (without this, lease_items > 1 would amortize the lease call only
+        to re-pay per-item fetch RTTs). Doubles as a heartbeat — the
+        worker is provably alive and about to be busy for a while."""
+        items = [self.fetch(wid) for wid in wids]
+        self.heartbeat(worker)
+        return items
+
+    def complete(self, work_ids):
+        return self.queue.complete(work_ids)
+
+    def push_result(self, worker, wid, payload):
+        """Result plane: worker hands back one finished work id. The
+        master drains with `pop_results` and gates emission on
+        `queue.complete`, so pushes from a redelivery race are accepted
+        here and discarded there — exactly-once stays the master's call
+        (and so does `chunks_done` credit, via `note_done`). Each push
+        extends the worker's remaining leases: mid-batch progress IS a
+        heartbeat."""
+        with self.queue.lock:
+            self.queue.heartbeat_extend(worker)
+            self._w(worker).last_beat = self.queue.clock()
+            self._results.append((worker, wid, payload))
+        if self.monitor is not None:
+            self.monitor.beat(worker)
+        return True
+
+    def heartbeat(self, worker):
+        with self.queue.lock:
+            self.queue.heartbeat_extend(worker)
+            self._w(worker).last_beat = self.queue.clock()
+        if self.monitor is not None:
+            self.monitor.beat(worker)
+        return True
+
+    def fail_worker(self, worker):
+        return self.queue.fail_worker(worker)
+
+    def state(self):
+        return self.queue.state()
+
+    def progress(self):
+        return self.queue.progress()
+
+    @property
+    def finished(self):
+        return self.queue.finished
+
+    def next_deadline(self):
+        return self.queue.next_deadline()
+
+    def bye(self, worker, stats=None):
+        """Worker sign-off with its idle/busy split (per-worker idle time
+        is a Table 7 observable: deeper lease batches shrink it)."""
+        with self.queue.lock:
+            st = self._w(worker)
+            for k in ("idle_s", "busy_s"):
+                if stats and k in stats:
+                    setattr(st, k, float(stats[k]))
+        return True
+
+    # -- master-side (NOT served) -------------------------------------------
+    def pop_results(self):
+        """Drain the result inbox: [(worker, wid, payload), ...]."""
+        out = []
+        with self.queue.lock:
+            while self._results:
+                out.append(self._results.popleft())
+        return out
+
+    def worker_report(self):
+        """Snapshot of every known worker's progress, sorted by shard:
+        leases held right now, chunks done, redeliveries charged to it,
+        seconds since its last heartbeat."""
+        with self.queue.lock:
+            now = self.queue.clock()
+            out = []
+            for st in self.workers.values():
+                st.leases_held = len(self.queue.leases_held(st.worker))
+                st.redeliveries = int(
+                    self.queue.redelivered_from.get(st.worker, 0))
+                st.last_beat_age_s = (None if st.last_beat is None
+                                      else float(now - st.last_beat))
+                out.append(st)
+            return sorted(out, key=lambda s: (s.shard, s.worker))
+
+    # -- WorkQueue duck-typing extras (simulated in-process path) -----------
+    def heartbeat_extend(self, worker):
+        self.heartbeat(worker)
+
+    def leases_held(self, worker):
+        return self.queue.leases_held(worker)
+
+    @property
+    def clock(self):
+        return self.queue.clock
+
+    @property
+    def lease_timeout_s(self):
+        return self.queue.lease_timeout_s
+
+    @property
+    def redeliveries(self):
+        return self.queue.redeliveries
+
+    @property
+    def redelivered_from(self):
+        return self.queue.redelivered_from
+
+    @property
+    def n_items(self):
+        return self.queue.n_items
+
+
+# -------------------------------------------------------- result protocol
+
+def pack_result(res) -> dict:
+    """BatchResult -> picklable payload (mirrors the store-entry layout:
+    masks + stats + cleaned survivors; the pre-denoise wave5 intermediate
+    never crosses the process boundary — only its width does, so the
+    master can rebuild a shape-correct det record)."""
+    det = res.det
+    return {
+        "cleaned": np.asarray(res.cleaned, np.float32),
+        "keep": np.asarray(det.keep), "rain": np.asarray(det.rain),
+        "silence": np.asarray(det.silence),
+        "cicada15": np.asarray(det.cicada15),
+        "stats": {k: (int(v) if k == "n_chunks5" else float(v))
+                  for k, v in det.stats.items()},
+        "n_kept": int(res.n_kept), "src_bytes": int(res.src_bytes),
+        "wave_width": int(det.wave5.shape[-1]),
+    }
+
+
+def unpack_result(payload):
+    """payload -> (PipelineOutput, fields) — fields carries cleaned /
+    n_kept / src_bytes for the master's BatchResult. wave5 is zero-filled
+    at the recorded shape, the same convention CachedPlan uses for store
+    hits: it is an intermediate no downstream consumer reads."""
+    keep = payload["keep"]
+    wave5 = np.zeros((keep.shape[0], int(payload["wave_width"])),
+                     np.float32)
+    det = PipelineOutput(wave5=wave5, keep=keep, rain=payload["rain"],
+                         silence=payload["silence"],
+                         cicada15=payload["cicada15"],
+                         stats=dict(payload["stats"]))
+    return det, {"cleaned": payload["cleaned"],
+                 "n_kept": int(payload["n_kept"]),
+                 "src_bytes": int(payload["src_bytes"])}

@@ -1,0 +1,127 @@
+"""The worker runtime: one shard of the paper's slave loop, as a real
+process.
+
+  python -m repro.dist.worker --master HOST:PORT --shard K --lease-items N
+
+The worker owns everything shard-local: it signs in (`hello` returns the
+setup blob: pipeline config, stage names, pad_multiple, tail bucket,
+kernel backend mode), builds its OWN `PipelineGraph` + jitted detect/tail
+phases (per-process CompileCache — compiles never cross the boundary),
+then loops:
+
+  lease      up to `lease_items` work ids in ONE round-trip — the paper's
+             Table 7 queue-size knob (`max_queue_size`): deeper batches
+             amortize master round-trips against redelivery exposure
+  fetch      the chunk bytes for the whole lease batch in one round-trip
+             (the master owns the loader; the paper's master hands slaves
+             files the same way)
+  compute    detect -> device-resident survivor compaction -> tail, the
+             exact TwoPhasePlan path, so output bytes match the
+             single-process plans
+  push       results stream back per item (the paper's send_interval),
+             each push doubling as a heartbeat; the MASTER completes the
+             work id, so a worker killed after push but before the master
+             drains it still resolves exactly-once
+
+A SIGKILL anywhere in that loop leaves leases registered un-completed —
+recovery is the queue's lease expiry or the master's `fail_worker`, never
+worker-side cleanup. The runtime is also importable (`run_worker`) so
+tests can drive it in-process over an `InProcTransport`.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+
+def run_worker(master, shard, lease_items=1, poll_s=0.05, transport=None,
+               max_items=None):
+    """Run one worker against a served QueueService. Returns the
+    idle/busy stats dict it also reports via `bye`. `master` is an
+    address for the given transport (HOST:PORT for proc; the service
+    object itself for in-proc). `max_items` caps total processed items
+    (tests); None means run until the queue is finished."""
+    # imports deferred past arg parsing so `--help` stays instant
+    from repro.core.graph import PipelineGraph
+    from repro.core.plans import TwoPhasePlan
+    from repro.dist.transport import InProcTransport, ProcTransport
+    from repro.kernels import backend
+
+    if transport is None:
+        transport = ProcTransport()
+    proxy = transport.connect(master)
+    worker = f"shard{int(shard)}"
+    spec = proxy.call("hello", worker, os.getpid(), int(shard))
+    if spec.get("backend_mode"):
+        backend.set_mode(spec["backend_mode"])
+    graph = PipelineGraph(spec["cfg"], spec.get("stages"),
+                          spec.get("source_channels", 2))
+    plan = TwoPhasePlan(graph, pad_multiple=spec.get("pad_multiple", 1),
+                        bucket=spec.get("bucket", "linear"))
+    from repro.dist.service import pack_result
+
+    lease_items = max(1, int(lease_items))
+    idle = busy = 0.0
+    done = 0
+    while max_items is None or done < max_items:
+        t0 = time.perf_counter()
+        ids = proxy.call("lease", worker, lease_items)
+        if not ids:
+            if proxy.call("finished"):
+                idle += time.perf_counter() - t0
+                break
+            proxy.call("heartbeat", worker)
+            idle += time.perf_counter() - t0
+            time.sleep(poll_s)
+            continue
+        items = list(zip(ids, proxy.call("fetch_many", worker, ids)))
+        idle += time.perf_counter() - t0
+        for wid, chunks in items:
+            if chunks is None:
+                # this lease lost a redelivery race: the id completed (and
+                # its stream buffer may be released) before our fetch —
+                # nothing to compute, the master already has the result
+                continue
+            t1 = time.perf_counter()
+            # a heartbeat per item bounds lease-expiry exposure to ONE
+            # item's compute time (first-item jit compiles are the long
+            # pole), not the whole lease batch
+            proxy.call("heartbeat", worker)
+            res = plan(np.asarray(chunks, np.float32))
+            payload = pack_result(res)
+            busy += time.perf_counter() - t1
+            t2 = time.perf_counter()
+            proxy.call("push_result", worker, wid, payload)
+            idle += time.perf_counter() - t2
+            done += 1
+    stats = {"idle_s": idle, "busy_s": busy, "chunks": done}
+    try:
+        proxy.call("bye", worker, stats)
+    finally:
+        proxy.close()
+    return stats
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="repro.dist worker process (spawned by the sharded "
+                    "plan's proc transport; authkey via env "
+                    "REPRO_DIST_AUTHKEY)")
+    ap.add_argument("--master", required=True, metavar="HOST:PORT")
+    ap.add_argument("--shard", type=int, required=True)
+    ap.add_argument("--lease-items", type=int, default=1,
+                    help="work ids per queue round-trip (the paper's "
+                         "max_queue_size knob)")
+    ap.add_argument("--poll-s", type=float, default=0.05,
+                    help="sleep between empty lease polls")
+    args = ap.parse_args(argv)
+    run_worker(args.master, args.shard, lease_items=args.lease_items,
+               poll_s=args.poll_s)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

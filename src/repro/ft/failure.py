@@ -10,44 +10,71 @@ training restarts from the last checkpoint with restore-time resharding.
 """
 from __future__ import annotations
 
+import os
+import signal
 import time
 from dataclasses import dataclass, field
 
 
 class CrashInjector:
-    """Scripted worker crashes for sharded-plan simulations.
+    """Scripted worker crashes — simulated shards AND real processes.
 
     `kill(shard, after_items=n)` arms a fuse: the shard detects n more
     pulled items normally, then dies while HOLDING its next lease — the
     lease is neither completed nor returned, so recovery exercises the real
     path (lease expiry or `WorkQueue.fail_worker`), mirroring the paper's
     master that "re-sends files to different slaves if a slave disconnects
-    or crashes". `revive(shard)` brings a shard back (elastic rejoin)."""
+    or crashes". `revive(shard)` brings a shard back (elastic rejoin).
+
+    Process mode: `attach(shard, pid)` binds the shard to a real worker
+    process (the sharded plan's proc transport does this at spawn). When
+    the fuse burns, the injected death is a genuine SIGKILL of that pid —
+    no atexit, no socket shutdown, the worker just stops existing
+    mid-lease, and the queue's redelivery machinery is observed end to
+    end."""
 
     def __init__(self):
         self._fuse: dict[int, int] = {}
         self._dead: set[int] = set()
+        self._pids: dict[int, int] = {}
 
     def kill(self, shard, after_items=0):
         self._fuse[shard] = int(after_items)
 
+    def attach(self, shard, pid):
+        """Bind `shard` to a live worker process id: its injected death
+        becomes a real SIGKILL."""
+        self._pids[shard] = int(pid)
+
     def revive(self, shard):
         self._dead.discard(shard)
         self._fuse.pop(shard, None)
+        self._pids.pop(shard, None)
 
     def alive(self, shard) -> bool:
         return shard not in self._dead
 
+    def _die(self, shard):
+        self._dead.add(shard)
+        pid = self._pids.get(shard)
+        if pid is not None:
+            try:
+                os.kill(pid, signal.SIGKILL)
+            except ProcessLookupError:    # already gone — dead is dead
+                pass
+
     def on_pull(self, shard) -> bool:
         """Called once per pulled work item BEFORE it is processed.
         Returns False exactly when the shard dies on this pull (its lease
-        stays registered in the queue, un-completed)."""
+        stays registered in the queue, un-completed). With an attached
+        pid, dying means SIGKILL — the caller's return-value handling is
+        then moot, the process is gone."""
         if shard in self._dead:
             return False
         fuse = self._fuse.get(shard)
         if fuse is not None:
             if fuse <= 0:
-                self._dead.add(shard)
+                self._die(shard)
                 return False
             self._fuse[shard] = fuse - 1
         return True

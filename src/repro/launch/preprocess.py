@@ -3,6 +3,7 @@ chunks through the stage-graph pipeline under a chosen execution plan.
 
   PYTHONPATH=src python -m repro.launch.preprocess --minutes 8 --plan async --depth 4
   PYTHONPATH=src python -m repro.launch.preprocess --plan sharded --shards 4
+  PYTHONPATH=src python -m repro.launch.preprocess --plan sharded --transport proc --shards 2 --lease-items 4
   PYTHONPATH=src python -m repro.launch.preprocess --plan sharded --store /data/store
   PYTHONPATH=src python -m repro.launch.preprocess --store /data/store --resume
 
@@ -10,7 +11,13 @@ Reports per-stage removal fractions and throughput (the paper's headline
 metric: MB/s of source audio preprocessed; their 4-VM x 4-core figure was
 16.4-16.5 MB/s). Per-batch stats are aggregated weighted by chunk count, so
 uneven batches don't skew the fractions. The sharded plan additionally
-reports queue redeliveries and the last round's survivor re-shard loads.
+reports queue redeliveries, the last round's survivor re-shard loads, and a
+per-worker progress summary (leases held, chunks done, redeliveries charged,
+heartbeat age, idle/busy split) — under BOTH transports: `--transport
+inproc` is the simulated single-process mode, `--transport proc` spawns
+real worker processes (`python -m repro.dist.worker`) that pull leases over
+the master's socket in batches of `--lease-items` (the paper's Table 7
+`max_queue_size` knob).
 
 `--plan` choices come straight from the `PLANS` registry, so new plans
 appear here without touching this driver. `--plan async` is the deep
@@ -51,7 +58,16 @@ def main(argv=None):
     ap.add_argument("--plan", "--mode", dest="plan", default="two_phase",
                     choices=sorted(PLANS))
     ap.add_argument("--shards", type=int, default=2,
-                    help="simulated shard count for --plan sharded")
+                    help="shard / worker count for --plan sharded")
+    ap.add_argument("--transport", choices=("inproc", "proc"),
+                    default="inproc",
+                    help="sharded worker runtime: 'inproc' simulates "
+                         "every shard in this process (deterministic, "
+                         "zero spawn cost); 'proc' runs real worker "
+                         "processes over the repro.dist socket transport")
+    ap.add_argument("--lease-items", type=int, default=1,
+                    help="work ids per queue round-trip (the paper's "
+                         "Table 7 max_queue_size knob) for --plan sharded")
     ap.add_argument("--depth", type=int, default=None,
                     help="detect dispatch-ahead window for --plan async "
                          "(default 4)")
@@ -80,8 +96,16 @@ def main(argv=None):
     mesh = make_local_mesh()
     pad = max(1, len(jax.devices()))
     sharded = args.plan == "sharded"
+    if not sharded:
+        if args.transport != "inproc":
+            ap.error("--transport picks the sharded plan's worker "
+                     f"runtime; plan '{args.plan}' has no workers")
+        if args.lease_items != 1:
+            ap.error("--lease-items batches the sharded plan's queue "
+                     f"pulls; plan '{args.plan}' has no lease loop")
     rules = pool_rules(args.shards, mesh) if sharded else ShardingRules(mesh)
-    plan_kwargs = {"shards": args.shards} if sharded else {}
+    plan_kwargs = {"shards": args.shards, "transport": args.transport,
+                   "lease_items": args.lease_items} if sharded else {}
     if args.plan == "async":
         plan_kwargs["depth"] = 4 if args.depth is None else args.depth
     elif args.depth is not None:
@@ -106,12 +130,19 @@ def main(argv=None):
         loader = AudioChunkLoader(seed=args.seed, n_batches=n_batches,
                                   batch_long_chunks=args.batch_long_chunks)
     elif sharded:
-        # per-shard loaders over ONE shared leased queue; shards share this
-        # process's mesh, so their compiles dedup in the CompileCache
+        # per-shard loaders over ONE shared leased queue; in-proc shards
+        # share this process's mesh so their compiles dedup in the
+        # CompileCache, proc workers compile in their own processes
         plan = "sharded"
+        # proc workers heartbeat per item, but the FIRST item of a batch
+        # carries the jit compile (~minute on CPU) — give real processes
+        # a lease long enough that a healthy compiling worker is never
+        # mistaken for a dead one
         loader = audio_shard_pool(
             seed=args.seed, n_batches=n_batches, n_shards=args.shards,
-            batch_long_chunks=args.batch_long_chunks)
+            batch_long_chunks=args.batch_long_chunks,
+            lease_items=args.lease_items,
+            lease_timeout_s=300.0 if args.transport == "proc" else 60.0)
     else:
         plan = args.plan
         loader = AudioChunkLoader(seed=args.seed, n_batches=n_batches,
@@ -158,7 +189,9 @@ def main(argv=None):
           f"{float(bs['imbalance_after_compact']):.3f} after compaction")
     if exec_plan.name == "sharded":
         asg = exec_plan.last_assignment
-        print(f"shards={args.shards} redeliveries={exec_plan.redeliveries}")
+        print(f"shards={args.shards} transport={args.transport} "
+              f"lease_items={args.lease_items} "
+              f"redeliveries={exec_plan.redeliveries}")
         if asg is not None:
             st = asg.stats()
             print(f"last-round survivor re-shard: "
@@ -166,6 +199,8 @@ def main(argv=None):
                   f"{st['loads_after'].tolist()} "
                   f"(max/min {st['max_min_before']:.2f} -> "
                   f"{st['max_min_after']:.2f}, moved {st['moved']})")
+        for line in worker_summary(exec_plan.worker_stats):
+            print(line)
     if timings:
         report = pipeline_report(timings)
         stages = "  ".join(f"{k} {report[k + '_ms']:.2f}ms"
@@ -190,6 +225,27 @@ def main(argv=None):
               f"{rep['entries_after']} entries / "
               f"{rep['bytes_after'] / 2**20:.1f} MB retained")
     return tot_kept
+
+
+def worker_summary(worker_stats):
+    """Per-worker progress lines for the end-of-run summary (sharded plan,
+    both transports): queue round-trips vs work ids granted (the lease-
+    batching economy), chunks finished, leases still held, redeliveries
+    charged to the worker (its lost leases), heartbeat age, and — proc
+    transport only — the worker-reported idle/busy split."""
+    lines = []
+    for st in worker_stats or ():
+        pid = f" pid={st.pid}" if st.pid else ""
+        beat = ("never" if st.last_beat_age_s is None
+                else f"{st.last_beat_age_s:.1f}s ago")
+        split = (f"  idle {st.idle_s:.1f}s / busy {st.busy_s:.1f}s"
+                 if (st.idle_s or st.busy_s) else "")
+        lines.append(
+            f"worker {st.worker}{pid}: {st.chunks_done} chunks done, "
+            f"{st.leased_total} leased over {st.lease_calls} round-trips "
+            f"({st.leases_held} still held), "
+            f"{st.redeliveries} redelivered, last beat {beat}{split}")
+    return lines
 
 
 def pipeline_report(timings):

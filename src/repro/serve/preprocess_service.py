@@ -11,6 +11,11 @@ Extra keyword arguments are forwarded to the execution plan, so
 `PreprocessService(cfg, plan="sharded", shards=4)` serves each pumped
 batch through the multi-shard path (rows split across shards, survivors
 re-balanced before MMSE) without the service knowing anything about it.
+Note the sharded plan's `transport=` knob does NOT change serving:
+single-batch pumps always row-split in-process — per-request worker
+process spawns are not a serving latency anyone wants (a persistent
+worker pool for serving is future work, see ROADMAP); `worker_stats`
+reports per-worker progress when a stream-mode run happened on the plan.
 
 Warm-cache serving rides the same passthrough:
 `PreprocessService(cfg, plan="cached", store=DIR)` consults the
@@ -98,3 +103,9 @@ class PreprocessService:
         """Store hit/miss accounting when serving through a cached plan
         (None otherwise)."""
         return getattr(self.pre.plan, "stats", None)
+
+    @property
+    def worker_stats(self):
+        """Per-worker progress ledger of the sharded plan's most recent
+        stream run (None for other plans / before any run)."""
+        return getattr(self.pre.plan, "worker_stats", None)
