@@ -1,0 +1,226 @@
+"""Serving load test: persistent worker pool + continuous batching under
+N concurrent synthetic clients.
+
+What it measures, on a pool of long-lived proc workers (spawned ONCE for
+the whole bench — the acceptance story is warm jits and stable pids):
+
+  * wave protocol — >= 3 consecutive pump waves through the same pool:
+    same worker pids every wave, wave 2+ wall a fraction of wave 1's
+    (the compile paid once, never again)
+  * load levels — >= 3 concurrency levels (clients x per-client arrival
+    rate), each level timed with the min-of-2 protocol
+    `bench_dispatch_depth` uses (two passes of fresh request seeds, the
+    faster pass reported — absorbs shared-machine load spikes): client-
+    observed p50/p99 latency, completed-request throughput, and the
+    batch-occupancy histogram from the batcher's dispatch log
+  * parity — EVERY batch the batcher dispatched is rebuilt bit-exactly
+    from its logged request ids and re-run through the in-process
+    two_phase plan; every served record must match bit-for-bit
+
+Findings: saturation throughput + the level where throughput stopped
+growing (the saturation point), p99-vs-occupancy pairs per level, pid
+stability, and the wave walls. Machine-readable record:
+`results/BENCH_serving.json`.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.configs import SERF_AUDIO as cfg
+from repro.core.plans import Preprocessor
+from repro.data.loader import audio_batch_maker
+from repro.serve import ContinuousBatcher, WorkerPool
+from benchmarks.util import table, save_json
+
+
+def _occupancy_hist(entries):
+    hist = {}
+    for e in entries:
+        key = f"{e['n_real']}/{e['rows']}"
+        hist[key] = hist.get(key, 0) + 1
+    return hist
+
+
+def _verify_batches(chunks_by_rid, records, log_entries, ref):
+    """Rebuild every dispatched batch from its logged rids (+ zero pads)
+    and check each served record bit-for-bit against two_phase."""
+    checked = 0
+    for e in log_entries:
+        rows = [chunks_by_rid[r] for r in e["rids"]]
+        batch = np.stack(rows)
+        if e["rows"] > e["n_real"]:
+            pad = np.zeros((e["rows"] - e["n_real"],) + batch.shape[1:],
+                           np.float32)
+            batch = np.concatenate([batch, pad])
+        want = ref(batch)
+        keep = np.asarray(want.det.keep)
+        per = keep.size // e["rows"]
+        offs = np.concatenate([[0], np.cumsum(keep)]).astype(int)
+        for j, rid in enumerate(e["rids"]):
+            rec = records.get(rid)
+            if rec is None or not rec["ok"]:
+                continue
+            lo, hi = j * per, (j + 1) * per
+            np.testing.assert_array_equal(rec["keep"], keep[lo:hi])
+            np.testing.assert_array_equal(
+                rec["cleaned"], want.cleaned[offs[lo]:offs[hi]])
+            checked += 1
+    return checked
+
+
+def _load_pass(pool, make, seed, clients, per_client, rate_hz, max_batch,
+               linger_s):
+    """One timed pass: `clients` threads, exponential inter-arrival at
+    `rate_hz` per client. Returns (wall, latencies, records,
+    chunks_by_rid, log_entries, n_expired)."""
+    batcher = ContinuousBatcher(pool=pool, max_batch=max_batch,
+                                max_queue=max(64, clients * per_client),
+                                linger_s=linger_s)
+    records, chunks_by_rid = {}, {}
+    lat, lock = [], threading.Lock()
+
+    def client(cid):
+        rng = np.random.RandomState(seed * 7919 + cid)
+        for i in range(per_client):
+            chunk = make(seed * 100 + cid * per_client + i)[0][0]
+            t0 = time.monotonic()
+            rid = batcher.submit(chunk)
+            with lock:
+                chunks_by_rid[rid] = chunk
+            rec = batcher.wait(rid, timeout_s=600.0)
+            dt = time.monotonic() - t0
+            with lock:
+                records[rid] = rec
+                lat.append(dt)
+            time.sleep(float(rng.exponential(1.0 / rate_hz)))
+
+    t0 = time.perf_counter()
+    with batcher:
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    wall = time.perf_counter() - t0
+    return (wall, lat, records, chunks_by_rid, list(batcher.batch_log),
+            batcher.expired)
+
+
+def run(minutes=6.0, workers=2, transport="proc", levels=None,
+        max_batch=4, linger_s=0.02, seed=13):
+    make = audio_batch_maker(seed=seed, batch_long_chunks=1)
+    ref = Preprocessor(cfg, plan="two_phase", pad_multiple=1)
+    # (clients, per-client rate): offered load grows ~4x per level so the
+    # top level saturates the pool whatever the machine
+    levels = levels or [(2, 0.5), (4, 1.0), (8, 2.0)]
+    per_client = max(2, int(round(minutes / 2)))
+
+    pool = WorkerPool(cfg, workers=workers, transport=transport,
+                      poll_s=0.005).start()
+    try:
+        # -- wave protocol: 3 pump waves, same pids, warm after wave 1 --
+        pids0 = dict(pool.pids)
+        wave_walls = []
+        for wave in range(3):
+            t0 = time.perf_counter()
+            wids = [pool.submit(make(1000 + wave * workers + k)[0])
+                    for k in range(workers)]
+            pool.wait(wids, timeout_s=600.0)
+            wave_walls.append(time.perf_counter() - t0)
+            assert pool.pids == pids0, \
+                f"worker pids changed across waves: {pids0} -> {pool.pids}"
+        assert pool.respawns == 0
+        warm = (not wave_walls
+                or wave_walls[1] < wave_walls[0] * 0.8
+                or transport == "inproc")
+        print(f"wave walls: {['%.2fs' % w for w in wave_walls]} on pids "
+              f"{sorted(pids0.values())} (no respawns)")
+
+        # -- load levels, min-of-2 per level ---------------------------
+        rows, recs = [], []
+        bit_checked = 0
+        for clients, rate in levels:
+            passes = []
+            for p in range(2):               # min-of-2: fresh seeds each
+                out = _load_pass(pool, make, seed + 17 * p + clients,
+                                 clients, per_client, rate, max_batch,
+                                 linger_s)
+                bit_checked += _verify_batches(out[3], out[2], out[4],
+                                               ref)
+                passes.append(out)
+            wall, lat, records, _, log, expired = min(
+                passes, key=lambda o: o[0])
+            ok = [r for r in records.values() if r["ok"]]
+            rec = {
+                "clients": clients, "rate_hz_per_client": rate,
+                "offered_rps": clients * rate,
+                "completed": len(ok), "expired": expired,
+                "wall_s": wall, "throughput_rps": len(ok) / wall,
+                "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                "p99_ms": float(np.percentile(lat, 99) * 1e3),
+                "mean_occupancy": float(np.mean(
+                    [e["occupancy"] for e in log])) if log else None,
+                "occupancy_hist": _occupancy_hist(log),
+            }
+            recs.append(rec)
+            rows.append([f"{clients}x{rate:g}/s", rec["offered_rps"],
+                         rec["throughput_rps"], rec["p50_ms"],
+                         rec["p99_ms"], rec["mean_occupancy"] or 0.0])
+        table(rows, ["clients x rate", "offered rps", "served rps",
+                     "p50 ms", "p99 ms", "occupancy"],
+              title=f"Serving load test ({workers} {transport} workers, "
+                    f"max_batch={max_batch}, {per_client} req/client, "
+                    f"min of 2 passes)")
+
+        # -- findings --------------------------------------------------
+        tps = [r["throughput_rps"] for r in recs]
+        sat_i = len(tps) - 1
+        for i in range(1, len(tps)):
+            if tps[i] < tps[i - 1] * 1.05:   # stopped growing: saturated
+                sat_i = i
+                break
+        findings = {
+            "workers": workers, "transport": transport,
+            "saturation_rps": max(tps),
+            "saturation_level": {
+                "clients": recs[sat_i]["clients"],
+                "rate_hz_per_client": recs[sat_i]["rate_hz_per_client"]},
+            "p99_vs_occupancy": [
+                {"occupancy": r["mean_occupancy"], "p99_ms": r["p99_ms"]}
+                for r in recs],
+            "pids_stable_across_waves": True,   # asserted above
+            "wave_walls_s": wave_walls,
+            "warm_after_wave1": bool(warm),
+            "bit_identical_to_two_phase": True,  # asserted per batch
+            "results_verified": bit_checked,
+        }
+        path = save_json("BENCH_serving", {"rows": recs,
+                                           "findings": findings})
+        print(f"\nsaturation {findings['saturation_rps']:.2f} req/s at "
+              f"{recs[sat_i]['clients']} clients; {bit_checked} served "
+              f"results verified bit-identical to two_phase")
+        print(f"record -> {path}")
+        return findings
+    finally:
+        pool.shutdown(drain=True)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--minutes", type=float, default=6.0)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--transport", default="proc",
+                    choices=("proc", "inproc"))
+    ap.add_argument("--max-batch", type=int, default=4)
+    args = ap.parse_args()
+    run(minutes=args.minutes, workers=args.workers,
+        transport=args.transport, max_batch=args.max_batch)
+
+
+if __name__ == "__main__":
+    main()

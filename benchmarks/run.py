@@ -28,7 +28,12 @@ def smoke():
     reference. Then the async-pipeline gate: `--plan async --depth 4` on a
     tiny stream must emit every chunk id exactly once IN INPUT ORDER,
     bit-identical to two_phase, with >= 1 overlapped dispatch visible in
-    the per-batch timing records."""
+    the per-batch timing records. Finally the SERVING gate: a pool of 2
+    persistent proc workers behind the continuous batcher takes 12
+    concurrent requests including one deadline miss and one worker
+    SIGKILL mid-request — every surviving request must resolve exactly
+    once, bit-identical to two_phase, with the killed worker's lease
+    redelivered."""
     import numpy as np
     from repro.configs import SERF_AUDIO as cfg
     from repro.core.plans import PLANS, Preprocessor
@@ -82,7 +87,12 @@ def smoke():
     except Exception:
         failures.append("async-pipeline")
         traceback.print_exc()
-    n_gates = len(PLANS) + 4
+    try:
+        _serving_smoke(np, cfg, Preprocessor)
+    except Exception:
+        failures.append("serving")
+        traceback.print_exc()
+    n_gates = len(PLANS) + 5
     print(f"\nsmoke: {n_gates - len(failures)}/{n_gates} "
           f"gates OK" + (f"; FAILED: {failures}" if failures else ""))
     raise SystemExit(1 if failures else 0)
@@ -224,6 +234,90 @@ def _async_smoke(np, cfg, Preprocessor):
           f"bit-identical to two_phase in {time.time() - t0:.1f}s")
 
 
+def _serving_smoke(np, cfg, Preprocessor):
+    """Serving-subsystem gate: a pool of 2 persistent PROC workers behind
+    the continuous batcher takes 12 concurrent requests, one with an
+    already-expired deadline (must fail, never reach a batch) and one
+    worker SIGKILLed the moment it is granted its first lease (its work
+    must be redelivered to the survivor). Every surviving request must
+    resolve exactly once, bit-identical to the in-process two_phase plan
+    on the same assembled batches."""
+    from repro.data.loader import audio_batch_maker
+    from repro.ft.failure import CrashInjector
+    from repro.serve import ContinuousBatcher, WorkerPool
+
+    t0 = time.time()
+    n_req = 12
+    make = audio_batch_maker(seed=7, batch_long_chunks=1)
+    chunks = [make(w)[0][0] for w in range(n_req)]
+    pool = WorkerPool(cfg, workers=2, transport="proc", respawn=False,
+                      poll_s=0.01).start()
+    try:
+        injector = CrashInjector()
+        injector.kill(0, after_items=0)   # shard0 dies on its 1st grant
+        injector.attach(0, pool.pids[0])
+        pool.service.on_grant = lambda worker, wid: injector.on_pull(
+            pool.service.workers[worker].shard)
+
+        batcher = ContinuousBatcher(pool=pool, max_batch=4, linger_s=0.05)
+        rids, doomed = [], None
+        for i, c in enumerate(chunks):
+            if i == 5:                    # one deadline miss, mid-queue
+                doomed = batcher.submit(c, timeout_s=0.0)
+                rids.append(doomed)
+            else:
+                rids.append(batcher.submit(c))
+        records = {}
+        stall = time.time() + 420
+        while len(records) < n_req:
+            for rid in batcher.pump():
+                records[rid] = batcher.result(rid)
+            assert time.time() < stall, \
+                f"serving smoke stalled ({len(records)}/{n_req} resolved)"
+            time.sleep(0.005)
+
+        # exactly-once: every record was popped exactly once
+        assert all(batcher.result(r) is None for r in rids)
+        assert records[doomed]["ok"] is False \
+            and records[doomed]["error"] == "deadline"
+        assert all(e["rids"].count(doomed) == 0
+                   for e in batcher.batch_log), \
+            "an expired request reached a dispatched batch"
+        survivors = [r for r in rids if r != doomed]
+        assert all(records[r]["ok"] for r in survivors)
+        assert injector.crashed == frozenset({0}), "shard0 not SIGKILLed"
+        assert pool.queue.redeliveries >= 1
+        assert pool.queue.redelivered_from["shard0"] >= 1
+
+        ref = Preprocessor(cfg, plan="two_phase", pad_multiple=1)
+        by_rid = dict(zip(rids, chunks))
+        checked = 0
+        for e in batcher.batch_log:
+            batch = np.stack([by_rid[r] for r in e["rids"]])
+            if e["rows"] > e["n_real"]:
+                batch = np.concatenate([batch, np.zeros(
+                    (e["rows"] - e["n_real"],) + batch.shape[1:],
+                    np.float32)])
+            want = ref(batch)
+            keep = np.asarray(want.det.keep)
+            per = keep.size // e["rows"]
+            offs = np.concatenate([[0], np.cumsum(keep)]).astype(int)
+            for j, rid in enumerate(e["rids"]):
+                lo, hi = j * per, (j + 1) * per
+                np.testing.assert_array_equal(records[rid]["keep"],
+                                              keep[lo:hi])
+                np.testing.assert_array_equal(
+                    records[rid]["cleaned"], want.cleaned[offs[lo]:offs[hi]])
+                checked += 1
+        assert checked == len(survivors)
+        print(f"plan serving    OK: 2 proc workers, {len(survivors)}/"
+              f"{n_req} requests exactly-once + bit-identical "
+              f"(1 deadline miss, shard0 SIGKILLed, redeliveries="
+              f"{pool.queue.redeliveries}) in {time.time() - t0:.1f}s")
+    finally:
+        pool.shutdown(drain=False)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -241,7 +335,8 @@ def main():
                             bench_comm, bench_config_search, bench_scaling,
                             bench_load_balance, bench_utilization,
                             bench_early_exit, bench_cache,
-                            bench_dispatch_depth, bench_queue_depth)
+                            bench_dispatch_depth, bench_queue_depth,
+                            bench_serving)
     steps = [
         ("Table 1 / Fig 1: stage times",
          lambda: bench_stage_times.run(minutes=minutes)),
@@ -270,6 +365,9 @@ def main():
         ("Pipeline: dispatch depth x survivor buckets",
          lambda: bench_dispatch_depth.run(
              minutes=16.0 if not args.full else 32.0)),
+        ("Serving: worker pool + continuous batching p50/p99",
+         lambda: bench_serving.run(
+             minutes=6.0 if not args.full else 16.0)),
     ]
     failures = []
     for name, fn in steps:

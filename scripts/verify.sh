@@ -16,7 +16,13 @@
 #      PLUS the async-pipeline gate — `--plan async --depth 4` on a tiny
 #      stream must emit every chunk id exactly once in input order,
 #      bit-identical to two_phase, with >= 1 overlapped dispatch observed
-#      in the per-batch timing records
+#      in the per-batch timing records —
+#      PLUS the serving gate — a persistent pool of 2 proc workers behind
+#      the continuous batcher serving 12 concurrent requests, one with an
+#      already-expired deadline (must fail, never dispatch) and one
+#      worker SIGKILLed at its first lease grant (work redelivered): all
+#      surviving requests answered exactly once, bit-identical to
+#      two_phase
 #
 #   bash scripts/verify.sh [extra pytest args]
 set -euo pipefail

@@ -88,6 +88,18 @@ the execution strategy. Six plans, and when to pick each:
                       Without a store it degrades to a transparent
                       pass-through of its inner plan.
 
+Serving sits ON TOP of these plans rather than being a seventh one: the
+batch-stream plans above amortize compile + dispatch over a stream that
+already exists, while `repro.serve` answers requests that arrive one at a
+time. `serve.WorkerPool` keeps `repro.dist` workers alive across pumps
+(a standing work queue instead of `ShardedPlan`'s per-stream one, so jits
+stay warm and pids stable between waves), `serve.ContinuousBatcher`
+coalesces concurrent requests into zero-padded pow2 device batches with
+admission control and per-request deadlines, and `serve.
+PreprocessService` checks a `CachedPlan`-style store before ever touching
+a worker. Any batch the serving tier dispatches runs the same `two_phase`
+stages as the plans here and stays bit-identical to them.
+
 All plans sit behind the `Preprocessor` facade, and all jitted phases live
 in one keyed LRU `CompileCache`. Keys are *value* fingerprints — config,
 stage list, `ShardingRules.fingerprint` (mesh shape + rule table + device

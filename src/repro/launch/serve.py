@@ -1,32 +1,38 @@
-"""Serving driver: batched decode against a (reduced, CPU-runnable) model.
+"""Serving driver, two modes:
 
+LM decode (the model-zoo twin):
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-7b --reduced \
       --batch 4 --prompt-len 16 --gen 32
+
+Audio preprocessing behind the serving subsystem — a persistent worker
+pool plus the continuous batcher, fed by synthetic concurrent clients:
+  PYTHONPATH=src python -m repro.launch.serve --audio \
+      --pool-workers 2 --pool-transport proc --clients 4 --requests 12 \
+      --max-batch 4 --linger-ms 20
+
+The audio mode is the operational entry point for the serving tier: it
+stands up a `WorkerPool` (long-lived `repro.dist` workers, warm jits
+across waves), fronts it with a `ContinuousBatcher` (pow2 zero-padded
+batch assembly, admission control, per-request deadlines), drives it
+with concurrent client threads, and reports p50/p99 latency, batch
+occupancy, and the per-worker ledger. `benchmarks/bench_serving.py` is
+the calibrated load-test version of the same loop.
 """
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import get_config, reduced as reduce_cfg
-from repro.models.zoo import build_model
-from repro.distributed.sharding import NULL_RULES
-from repro.serve.engine import ServeEngine, RequestQueue
 
+def _lm_main(args):
+    import jax
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma-7b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    from repro.configs import get_config, reduced as reduce_cfg
+    from repro.models.zoo import build_model
+    from repro.serve.engine import ServeEngine, RequestQueue
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -51,6 +57,85 @@ def main(argv=None):
     sample = q.result(rids[0])
     print("sample output tokens:", sample[:16].tolist())
     return done
+
+
+def _audio_main(args):
+    from repro.configs import SERF_AUDIO as cfg
+    from repro.data.loader import audio_batch_maker
+    from repro.serve import ContinuousBatcher, WorkerPool
+
+    make = audio_batch_maker(seed=args.seed, batch_long_chunks=1)
+    pool = WorkerPool(cfg, workers=args.pool_workers,
+                      transport=args.pool_transport,
+                      poll_s=args.poll_ms / 1e3).start()
+    batcher = ContinuousBatcher(pool=pool, max_batch=args.max_batch,
+                                max_queue=args.max_queue,
+                                linger_s=args.linger_ms / 1e3)
+    lat, lock = [], threading.Lock()
+
+    def client(cid):
+        rng = np.random.RandomState(args.seed * 1000 + cid)
+        for i in range(args.requests):
+            chunk = make(cid * args.requests + i)[0][0]
+            t0 = time.monotonic()
+            rid = batcher.submit(chunk, timeout_s=args.timeout_s)
+            rec = batcher.wait(rid, timeout_s=600.0)
+            with lock:
+                lat.append((time.monotonic() - t0, rec["ok"]))
+            time.sleep(float(rng.exponential(1.0 / args.rate_hz)))
+
+    t0 = time.time()
+    with batcher:
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(args.clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    wall = time.time() - t0
+    pool.shutdown(drain=True)
+
+    ok = [l for l, good in lat if good]
+    print(f"served {len(ok)}/{len(lat)} requests in {wall:.1f}s "
+          f"({len(ok) / wall:.2f} req/s)")
+    if ok:
+        print(f"latency p50 {np.percentile(ok, 50) * 1e3:.0f} ms, "
+              f"p99 {np.percentile(ok, 99) * 1e3:.0f} ms")
+    print(f"batcher: {batcher.stats()}")
+    print("workers:", [(s.worker, s.pid, s.chunks_done)
+                       for s in pool.worker_stats])
+    return lat
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--audio", action="store_true",
+                    help="serve audio preprocessing via the worker pool "
+                         "+ continuous batcher (default: LM decode)")
+    ap.add_argument("--seed", type=int, default=0)
+    # LM mode
+    ap.add_argument("--arch", default="gemma-7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="requests total (LM) / per client (audio)")
+    # audio serving mode
+    ap.add_argument("--pool-workers", type=int, default=2)
+    ap.add_argument("--pool-transport", default="proc",
+                    choices=("proc", "inproc"))
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--rate-hz", type=float, default=1.0,
+                    help="per-client mean arrival rate")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-queue", type=int, default=64)
+    ap.add_argument("--linger-ms", type=float, default=20.0)
+    ap.add_argument("--poll-ms", type=float, default=5.0)
+    ap.add_argument("--timeout-s", type=float, default=None,
+                    help="per-request deadline (default: none)")
+    args = ap.parse_args(argv)
+    return _audio_main(args) if args.audio else _lm_main(args)
 
 
 if __name__ == "__main__":

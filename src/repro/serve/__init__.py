@@ -1,0 +1,29 @@
+"""repro.serve — the serving subsystem: request traffic -> warm devices.
+
+Three tiers, by traffic shape:
+
+  * In-process pumps (`PreprocessService` without a pool,
+    `engine.RequestQueue`): requests batched per pump wave, computed in
+    the calling process. Simplest; right for offline drains, notebooks,
+    and tests. No process isolation, batch latency = compute latency.
+  * Persistent worker pool (`pool.WorkerPool`): long-lived
+    `repro.dist` workers over a standing leased queue — spawned once,
+    jits warm across waves, SIGKILL-survivable (leases redeliver, the
+    completion gate keeps results exactly-once), with per-worker stats
+    and pool gauges. Right whenever serving outlives one batch.
+  * Continuous batching (`batcher.ContinuousBatcher`): concurrent small
+    requests coalesced into pow2-bucketed zero-padded batches, with
+    admission control, per-request deadlines, and a linger-bounded pump
+    that serves partial batches. Front-end for the pool (or any plan)
+    under live concurrent traffic.
+
+Batch/stream workloads (archives, resumable runs) belong to the
+execution plans (`repro.core.plans`); this package is for requests that
+arrive over time and want answers back individually.
+"""
+from repro.serve.batcher import AdmissionError, ContinuousBatcher
+from repro.serve.pool import WorkerPool
+from repro.serve.preprocess_service import PreprocessService
+
+__all__ = ["AdmissionError", "ContinuousBatcher", "PreprocessService",
+           "WorkerPool"]

@@ -1,6 +1,10 @@
 """Batched serving engine: prefill + decode loop with a host-side request
 queue (static-batch continuous-batching-lite: finished slots are refilled
 from the queue at each refill interval).
+
+This is the LM decode twin of `serve.preprocess_service`; the
+preprocessing traffic path with persistent workers and true continuous
+batching lives in `repro.serve.pool` + `repro.serve.batcher`.
 """
 from __future__ import annotations
 
@@ -116,12 +120,14 @@ class RequestQueue:
             rid, p = self._queue.popleft()
             rids.append(rid)
             batch.append(p)
-        while len(batch) < self.batch_size:      # pad with copies
-            batch.append(batch[-1])
+        while len(batch) < self.batch_size:      # zero-pad, never copies:
+            batch.append(np.zeros(self.prompt_len, np.int32))
         toks = self.engine.generate(np.stack(batch), self.n_tokens)
         for i, rid in enumerate(rids):
             self._results[rid] = toks[i]
         return rids
 
     def result(self, rid):
-        return self._results.get(rid)
+        """Pop a finished request's tokens (handed over exactly once, so
+        the result map stays bounded by in-flight work)."""
+        return self._results.pop(rid, None)

@@ -1,0 +1,329 @@
+"""Persistent worker pool: long-lived `repro.dist` workers serving a
+standing queue.
+
+The batch runtime (`ShardedPlan` proc mode) spawns workers per run and
+tears them down with the stream — correct for archives, hopeless for
+serving: every request wave would re-pay process spawn + jit compile.
+`WorkerPool` inverts the lifecycle. Workers are spawned ONCE over the
+existing transports (`InProcTransport` threads or `ProcTransport`
+processes — the identical `repro.dist.worker.run_worker` loop either
+way), and they stay alive across submissions because the pool's
+`StandingWorkQueue` reports `finished` only after `close()` drains: an
+idle worker's empty lease turns into heartbeat + poll, not exit. After
+the first item per worker, every jit is warm — wave 2 of a pump runs at
+steady-state latency on the same pids as wave 1.
+
+Work enters via `submit(chunks) -> wid` (any (B, C, S_long_src) batch —
+the continuous batcher assembles those from single-chunk requests) and
+leaves via `poll()` / `wait()` as the same `BatchResult` the in-process
+plans produce: workers run the exact TwoPhasePlan detect -> device
+compaction -> tail path, so pool output is bit-identical to a direct
+`two_phase` call on the same batch.
+
+Fault story is inherited, not reinvented: leases + completion gating give
+at-least-once delivery with exactly-once emission. A SIGKILLed worker's
+leases come back via `fail_worker` (the pool notices the dead pid on the
+next poll) or lease expiry, and the redelivered request goes to the front
+of the line. `respawn=True` additionally replaces dead proc workers.
+
+Observability: `worker_stats` is the per-worker `WorkerStats` ledger the
+batch runtime already keeps; `gauges()` adds the pool-level serving view
+(busy/idle workers, queue depth, in-flight leases, oldest-request age).
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.core.plans import BatchResult
+from repro.data.queue import StandingWorkQueue
+from repro.dist.service import QueueService, unpack_result
+from repro.dist.transport import InProcTransport, ProcTransport
+from repro.dist.worker import run_worker
+from repro.kernels import backend
+
+
+class WorkerPool:
+    """Long-lived preprocessing workers over a standing QueueService.
+
+    Parameters:
+      cfg              pipeline config (the setup blob workers build
+                       their jits from — same facts ShardedPlan ships)
+      workers          pool size
+      transport        "proc" (real processes, SIGKILL-able) or "inproc"
+                       (daemon threads driving the same worker runtime —
+                       tests and single-host serving without spawn cost)
+      stages           optional stage-name override (None = config list)
+      pad_multiple / bucket
+                       worker-side tail policy; "pow2" bounds tail
+                       retraces across the varying survivor counts a
+                       request mix produces
+      lease_timeout_s  None = transport default (proc workers pay a
+                       first-item compile, so their deadline is generous)
+      poll_s           worker sleep between empty leases (sets the idle
+                       wake-up latency floor for new work)
+      respawn          replace dead PROC workers automatically (dead
+                       workers always have their leases reclaimed either
+                       way; respawn=False lets chaos tests prove the
+                       survivors absorb the load)
+    """
+
+    def __init__(self, cfg, workers=2, transport="proc", stages=None,
+                 source_channels=2, pad_multiple=1, bucket="pow2",
+                 lease_items=1, lease_timeout_s=None, poll_s=0.01,
+                 respawn=True, monitor=None):
+        if transport not in ("proc", "inproc"):
+            raise ValueError(f"unknown transport {transport!r} "
+                             "(expected 'proc' or 'inproc')")
+        self.cfg = cfg
+        self.workers = max(1, int(workers))
+        self.transport = transport
+        self.lease_items = max(1, int(lease_items))
+        self.poll_s = float(poll_s)
+        self.respawn = bool(respawn)
+        if lease_timeout_s is None:
+            lease_timeout_s = 300.0 if transport == "proc" else 60.0
+        self.queue = StandingWorkQueue(lease_timeout_s=lease_timeout_s)
+        self._setup = {"cfg": cfg,
+                       "stages": list(stages) if stages else None,
+                       "source_channels": int(source_channels),
+                       "pad_multiple": int(pad_multiple),
+                       "bucket": bucket,
+                       "backend_mode": backend.get_mode()}
+        self.service = QueueService(self.queue, fetch_item=self._fetch,
+                                    setup=self._setup, monitor=monitor)
+        self._items = {}        # wid -> chunk bytes (the data plane)
+        self._submit_t = {}     # wid -> submit time (oldest-age gauge)
+        self._completed = {}    # wid -> BatchResult awaiting claim
+        self._claim_lock = threading.Lock()
+        self._handles = {}      # shard -> WorkerHandle (proc)
+        self._threads = {}      # shard -> Thread (inproc)
+        self._dead = set()      # shards whose leases were reclaimed
+        self.respawns = 0
+        self._tp = None
+        self._started = False
+        self._shut = False
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self):
+        """Spawn the workers once; they live until shutdown()."""
+        if self._started:
+            raise RuntimeError("pool already started")
+        self._started = True
+        if self.transport == "proc":
+            self._tp = ProcTransport()
+            self._tp.serve(self.service)
+            for k in range(self.workers):
+                self._handles[k] = self._spawn(k)
+        else:
+            self._tp = InProcTransport()
+            self._tp.serve(self.service)
+            for k in range(self.workers):
+                self._threads[k] = self._spawn_thread(k)
+        return self
+
+    def _spawn(self, shard):
+        return self._tp.spawn_worker(shard, lease_items=self.lease_items,
+                                     poll_s=self.poll_s)
+
+    def _spawn_thread(self, shard):
+        t = threading.Thread(
+            target=run_worker, args=(self.service, shard),
+            kwargs=dict(lease_items=self.lease_items, poll_s=self.poll_s,
+                        transport=InProcTransport()),
+            daemon=True, name=f"repro-pool-shard{shard}")
+        t.start()
+        return t
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb):
+        self.shutdown(drain=exc_type is None)
+
+    # -- work plane ---------------------------------------------------------
+    def submit(self, chunks) -> int:
+        """Admit one (B, C, S_long_src) batch; returns its work id. The
+        item is registered under the queue's own lock TOGETHER with the
+        admission, so a worker's lease can never observe a wid whose
+        bytes are not yet fetchable."""
+        x = np.asarray(chunks, np.float32)
+        with self.queue.lock:
+            wid = self.queue.add()
+            self._items[wid] = x
+            self._submit_t[wid] = time.monotonic()
+        return wid
+
+    def _fetch(self, wid):
+        """Data plane. None answers a redelivered lease that lost the
+        race to a straggler's completion — the worker skips it."""
+        if self.queue.is_done(wid):
+            return None
+        with self.queue.lock:
+            item = self._items.get(wid)
+        if item is None:
+            if self.queue.is_done(wid):
+                return None
+            raise KeyError(f"work id {wid} has no registered item")
+        return item
+
+    def _pump(self):
+        """Drain worker pushes into the completed set, gating on
+        `queue.complete` so at-least-once pushes stay exactly-once
+        results; then reclaim dead workers."""
+        for worker, wid, payload in self.service.pop_results():
+            if not self.queue.complete([wid]):
+                continue            # a redelivery raced a straggler
+            self.service.note_done(worker)
+            with self.queue.lock:
+                self._items.pop(wid, None)
+                self._submit_t.pop(wid, None)
+            det, f = unpack_result(payload)
+            res = BatchResult(cleaned=f["cleaned"], det=det,
+                              n_kept=f["n_kept"], wid=wid,
+                              src_bytes=f["src_bytes"])
+            with self._claim_lock:
+                self._completed[wid] = res
+        self._reap_dead()
+
+    def _reap_dead(self):
+        """Return a dead worker's leases immediately (the fail_worker
+        fast path — lease expiry is the slow fallback) and, for proc
+        pools with respawn, replace the process."""
+        for k, h in list(self._handles.items()):
+            if k in self._dead or h.poll() is None:
+                continue
+            self._dead.add(k)
+            self.queue.fail_worker(h.worker)
+            if self.respawn and not self.queue.closed:
+                self._handles[k] = self._spawn(k)
+                self._dead.discard(k)
+                self.respawns += 1
+        for k, t in list(self._threads.items()):
+            if k not in self._dead and not t.is_alive() \
+                    and not self.queue.finished:
+                self._dead.add(k)
+                self.queue.fail_worker(f"shard{k}")
+
+    def poll(self):
+        """Non-blocking: drain and return every newly completed
+        {wid: BatchResult}. Results are handed over exactly once — a
+        claimed wid is forgotten (no unbounded result growth)."""
+        self._pump()
+        with self._claim_lock:
+            out, self._completed = self._completed, {}
+        return out
+
+    def claim(self, wids):
+        """Non-blocking targeted claim: drain, then return whichever of
+        `wids` are done as {wid: BatchResult}. Unlike poll() this leaves
+        other submitters' results unclaimed, so several front-ends can
+        share one pool."""
+        self._pump()
+        out = {}
+        with self._claim_lock:
+            for wid in set(wids) & self._completed.keys():
+                out[wid] = self._completed.pop(wid)
+        return out
+
+    def wait(self, wids, timeout_s=600.0):
+        """Block until every wid in `wids` completes; returns
+        {wid: BatchResult}. Claims ONLY the asked-for wids — results for
+        other submitters stay available to their own poll/wait."""
+        want = set(wids)
+        got = {}
+        deadline = time.monotonic() + timeout_s
+        while True:
+            self._pump()
+            with self._claim_lock:
+                for wid in want & self._completed.keys():
+                    got[wid] = self._completed.pop(wid)
+                want -= got.keys()
+            if not want:
+                return got
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"pool did not complete {sorted(want)} within "
+                    f"{timeout_s:.0f}s (gauges: {self.gauges()})")
+            time.sleep(0.002)
+
+    # -- observability ------------------------------------------------------
+    @property
+    def pids(self):
+        """shard -> pid of the live proc workers ({} for inproc): the
+        'same workers across waves' acceptance observable."""
+        return {k: h.pid for k, h in self._handles.items()
+                if h.poll() is None}
+
+    @property
+    def worker_stats(self):
+        """The per-worker WorkerStats ledger (lease calls, chunks done,
+        leases held, redeliveries charged, heartbeat age)."""
+        return self.service.worker_report()
+
+    def gauges(self):
+        """Pool-level serving gauges: busy/idle workers, queue depth,
+        in-flight leases, oldest unserved request age."""
+        queued, leased = self.queue.depth()
+        with self.queue.lock:
+            busy = sum(1 for st in self.service.workers.values()
+                       if self.queue.leases_held(st.worker))
+            oldest = min(self._submit_t.values(), default=None)
+        live = (len([h for h in self._handles.values()
+                     if h.poll() is None])
+                or len([t for t in self._threads.values() if t.is_alive()]))
+        done, total = self.queue.progress()
+        return {"workers": live, "busy": busy,
+                "idle": max(0, live - busy),
+                "queue_depth": queued, "in_flight": leased,
+                "oldest_age_s": (None if oldest is None
+                                 else time.monotonic() - oldest),
+                "submitted": total, "completed": done}
+
+    def kill_worker(self, shard):
+        """SIGKILL a proc worker (chaos testing — the pool must redeliver
+        its in-flight request exactly once)."""
+        self._handles[shard].kill()
+
+    # -- teardown -----------------------------------------------------------
+    def drain(self, timeout_s=600.0):
+        """Close admission and pump until every admitted item completed."""
+        self.queue.close()
+        deadline = time.monotonic() + timeout_s
+        while not self.queue.finished:
+            self._pump()
+            if self.queue.finished:
+                break
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"pool drain timed out (gauges: {self.gauges()})")
+            time.sleep(0.005)
+
+    def shutdown(self, drain=True, timeout_s=600.0):
+        """Stop the pool. drain=True serves everything admitted first;
+        drain=False abandons unfinished work (`queue.abort`). Workers
+        observe `finished`, sign off via `bye` (their idle/busy split
+        lands in the ledger), and exit; stragglers are TERM/KILLed."""
+        if self._shut:
+            return
+        self._shut = True
+        try:
+            if drain:
+                self.drain(timeout_s=timeout_s)
+            else:
+                self.queue.abort()
+            deadline = time.monotonic() + 10.0
+            for h in self._handles.values():
+                try:
+                    h.proc.wait(max(0.0, deadline - time.monotonic()))
+                except Exception:
+                    pass
+            for t in self._threads.values():
+                t.join(max(0.0, deadline - time.monotonic()))
+        finally:
+            for h in self._handles.values():
+                h.shutdown()
+            if self._tp is not None:
+                self._tp.close()

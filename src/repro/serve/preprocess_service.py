@@ -5,7 +5,9 @@ serving analogue of the paper's slave pull queue).
 
 Each request is one stereo long chunk; its result is the per-final-chunk
 keep mask plus the cleaned surviving chunks — what a downstream species
-classifier or archive-compaction consumer needs.
+classifier or archive-compaction consumer needs. Results are handed over
+exactly once: `result(rid)` POPS its record, so the result map cannot
+grow without bound under sustained traffic.
 
 Extra keyword arguments are forwarded to the execution plan, so
 `PreprocessService(cfg, plan="sharded", shards=4)` serves each pumped
@@ -13,17 +15,26 @@ batch through the multi-shard path (rows split across shards, survivors
 re-balanced before MMSE) without the service knowing anything about it.
 Note the sharded plan's `transport=` knob does NOT change serving:
 single-batch pumps always row-split in-process — per-request worker
-process spawns are not a serving latency anyone wants (a persistent
-worker pool for serving is future work, see ROADMAP); `worker_stats`
-reports per-worker progress when a stream-mode run happened on the plan.
+process spawns are not a serving latency anyone wants. For REAL worker
+processes behind serving, pass `pool=` (a started
+`repro.serve.pool.WorkerPool`): pumped batches are then submitted to the
+pool's long-lived workers (warm jits across pumps, same pids wave after
+wave) instead of computing in-process; `repro.serve.batcher.
+ContinuousBatcher` is the lower-latency front-end when requests arrive
+continuously rather than in pump waves.
 
 Warm-cache serving rides the same passthrough:
 `PreprocessService(cfg, plan="cached", store=DIR)` consults the
 content-addressed `repro.store.ChunkStore` per pumped batch — a batch
 whose exact bytes were served (or preprocessed offline) before returns
 from the store without touching a device. Batches are keyed as pumped,
-i.e. padded composition included, so recurring request groups hit;
-`cache_stats` reports the hit/miss/bytes-saved ledger.
+i.e. padded composition included, so recurring request groups hit; and
+because pad rows are ZEROS (never copies of a request), the key of a
+partial batch never depends on which request happened to arrive last.
+With `pool=` AND a cached plan, store hits short-circuit BEFORE touching
+a worker: only misses cost pool latency, and fresh results are written
+back so the next identical batch is a hit. `cache_stats` reports the
+hit/miss/bytes-saved ledger.
 
 `PreprocessService(cfg, plan="async", depth=4)` serves each pumped batch
 through the device-compaction path (only the keep mask and the cleaned
@@ -38,15 +49,18 @@ import collections
 
 import numpy as np
 
+from repro.core import scheduler as SCHED
 from repro.core.plans import Preprocessor
 from repro.distributed.sharding import NULL_RULES
 
 
 class PreprocessService:
     def __init__(self, cfg, rules=NULL_RULES, plan="two_phase",
-                 batch_long_chunks=4, pad_multiple=1, **plan_kwargs):
+                 batch_long_chunks=4, pad_multiple=1, pool=None,
+                 **plan_kwargs):
         self.cfg = cfg
         self.batch = batch_long_chunks
+        self.pool = pool
         self.pre = Preprocessor(cfg, rules, plan=plan,
                                 pad_multiple=pad_multiple, **plan_kwargs)
         self._queue = collections.deque()
@@ -63,8 +77,9 @@ class PreprocessService:
         return rid
 
     def pump(self):
-        """Run one full (padded) batch through the plan; returns the
-        completed request ids."""
+        """Run one full (zero-padded) batch through the plan — or through
+        the worker pool when one was given — and return the completed
+        request ids."""
         if not self._queue:
             return []
         rids, chunks = [], []
@@ -72,18 +87,27 @@ class PreprocessService:
             rid, c = self._queue.popleft()
             rids.append(rid)
             chunks.append(c)
-        while len(chunks) < self.batch:          # pad with copies
-            chunks.append(chunks[-1])
-        res = self.pre(np.stack(chunks))
+        batch, n_real = SCHED.pad_batch(np.stack(chunks), self.batch)
+        # pad rows are ZERO rows, never copies of a request: real bytes
+        # must not ride the batch twice (duplicate MMSE flops, and a
+        # cached plan would store a request's audio under a key that
+        # depends on which request happened to arrive last)
+        assert n_real == len(rids)
+        assert n_real == batch.shape[0] or not batch[n_real:].any(), \
+            "pad rows leaked real request bytes into the batch"
+        res = self._serve(batch)
         self.last_timings = res.timings
         keep = np.asarray(res.det.keep)
         rain = np.asarray(res.det.rain)
         silence = np.asarray(res.det.silence)
-        per = keep.size // len(chunks)           # final chunks per request
+        per = keep.size // batch.shape[0]        # final chunks per request
         # survivors are compacted in stable order: request j's cleaned rows
         # sit at [sum(keep[:j*per]), sum(keep[:(j+1)*per])). Masks are
         # sliced PER REQUEST — batch-level stats would be skewed by the
-        # pad copies and the other requests in the batch.
+        # pad rows and the other requests in the batch; zero pad rows can
+        # survive detection (their cleaned rows are zeros) but they trail
+        # every real request in the stable order, so no request is ever
+        # attributed a pad row.
         offs = np.concatenate([[0], np.cumsum(keep)])
         for j, rid in enumerate(rids):
             lo, hi = j * per, (j + 1) * per
@@ -95,8 +119,32 @@ class PreprocessService:
             }
         return rids
 
+    def _serve(self, batch):
+        """One assembled batch -> BatchResult. In-process plan by
+        default; with `pool=`, a cached plan's store is consulted FIRST
+        (warm hits never touch a worker), misses go to the pool's
+        persistent workers, and fresh results are written back."""
+        if self.pool is None:
+            return self.pre(batch)
+        plan = self.pre.plan
+        store = getattr(plan, "store", None)
+        key = None
+        if store is not None:
+            key = plan._key(batch)
+            hit = store.get(key, src_bytes=batch.nbytes)
+            if hit is not None:
+                return plan._result(*hit, wid=None, extra=None)
+        wid = self.pool.submit(batch)
+        res = self.pool.wait([wid])[wid]
+        if store is not None:
+            store.put(key, *plan._entry(res))
+        return res
+
     def result(self, rid):
-        return self._results.get(rid)
+        """Pop a finished request's record (None if unknown/pending).
+        Each record is handed over exactly once — the result map stays
+        bounded by in-flight work, not service lifetime."""
+        return self._results.pop(rid, None)
 
     @property
     def cache_stats(self):
@@ -106,6 +154,9 @@ class PreprocessService:
 
     @property
     def worker_stats(self):
-        """Per-worker progress ledger of the sharded plan's most recent
-        stream run (None for other plans / before any run)."""
+        """Per-worker progress ledger: the pool's live ledger when
+        serving through a worker pool, else the sharded plan's report of
+        its most recent stream run (None for other plans)."""
+        if self.pool is not None:
+            return self.pool.worker_stats
         return getattr(self.pre.plan, "worker_stats", None)

@@ -1,0 +1,325 @@
+"""The serving subsystem: StandingWorkQueue semantics, the persistent
+WorkerPool (bit-identity vs two_phase, warm waves, gauges, SIGKILL
+redelivery on real processes), the ContinuousBatcher (linger-bounded
+partial batches, deadlines, admission control, pow2 occupancy), and the
+service-level satellites (zero-padded pumps, result() popping, cached
+warm hits short-circuiting the pool)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import SERF_AUDIO as cfg
+from repro.core.plans import Preprocessor
+from repro.data.loader import audio_batch_maker
+from repro.data.queue import SettableClock, StandingWorkQueue
+from repro.serve import (AdmissionError, ContinuousBatcher,
+                        PreprocessService, WorkerPool)
+
+make = audio_batch_maker(seed=23, batch_long_chunks=1)
+CHUNKS = [make(w)[0][0] for w in range(8)]      # (2, S_long) requests
+REF = Preprocessor(cfg, plan="two_phase", pad_multiple=1)
+
+
+def ref_sliced(chunks, rows):
+    """Reference per-request records: the zero-padded batch through
+    two_phase, sliced exactly as the serving layers slice."""
+    batch = np.stack(chunks)
+    if rows > len(chunks):
+        batch = np.concatenate([batch, np.zeros(
+            (rows - len(chunks),) + batch.shape[1:], np.float32)])
+    res = REF(batch)
+    keep = np.asarray(res.det.keep)
+    per = keep.size // rows
+    offs = np.concatenate([[0], np.cumsum(keep)]).astype(int)
+    out = []
+    for j in range(len(chunks)):
+        lo, hi = j * per, (j + 1) * per
+        out.append({"keep": keep[lo:hi],
+                    "cleaned": res.cleaned[offs[lo]:offs[hi]]})
+    return out
+
+
+# ------------------------------------------------- standing queue
+
+def test_standing_queue_open_ended_fifo_and_close():
+    q = StandingWorkQueue(lease_timeout_s=60.0)
+    assert not q.finished                 # empty but OPEN: workers poll
+    a, b = q.add(), q.add()
+    assert q.lease("w", 1) == [a], "standing queue must lease FIFO"
+    assert q.lease("w", 2) == [b]
+    assert q.depth() == (0, 2)
+    q.complete([a, b])
+    assert not q.finished                 # drained but still open
+    c = q.add()
+    q.close()
+    with pytest.raises(RuntimeError):
+        q.add()                           # closed to new work
+    assert not q.finished                 # c outstanding
+    q.lease("w", 1)
+    q.complete([c])
+    assert q.finished
+
+def test_standing_queue_redelivery_beats_new_traffic():
+    clock = SettableClock()
+    q = StandingWorkQueue(lease_timeout_s=5.0, clock=clock)
+    old = q.add()
+    assert q.lease("dead", 1) == [old]
+    clock.t = 6.0                         # the lease expires
+    new = q.add()
+    assert q.lease("live", 1) == [old], \
+        "a redelivered request must go to the front of the line"
+    assert q.lease("live", 1) == [new]
+
+def test_standing_queue_abort_unblocks_workers():
+    q = StandingWorkQueue()
+    q.add()
+    q.abort()
+    assert q.finished                     # workers exit without draining
+
+
+# ------------------------------------------------- worker pool (inproc)
+
+def test_pool_waves_bit_identical_and_exactly_once():
+    """Three consecutive submit waves through ONE pool: every result
+    bit-identical to a direct two_phase call on the same batch, each wid
+    resolved exactly once, ledger/gauges consistent."""
+    with WorkerPool(cfg, workers=2, transport="inproc",
+                    poll_s=0.002) as pool:
+        seen = set()
+        for wave in range(3):
+            batches = {pool.submit(np.stack(CHUNKS[2 * k:2 * k + 2])):
+                       CHUNKS[2 * k:2 * k + 2] for k in range(2)}
+            got = pool.wait(list(batches), timeout_s=300.0)
+            assert sorted(got) == sorted(batches)
+            assert not seen & got.keys(), "a wid resolved twice"
+            seen |= got.keys()
+            for wid, res in got.items():
+                want = REF(np.stack(batches[wid]))
+                np.testing.assert_array_equal(np.asarray(res.det.keep),
+                                              np.asarray(want.det.keep))
+                np.testing.assert_array_equal(res.cleaned, want.cleaned)
+                assert res.n_kept == want.n_kept
+        g = pool.gauges()
+        assert g["completed"] == g["submitted"] == 6
+        assert g["queue_depth"] == 0 and g["oldest_age_s"] is None
+        assert sum(s.chunks_done for s in pool.worker_stats) == 6
+
+def test_pool_gauges_show_backlog():
+    pool = WorkerPool(cfg, workers=1, transport="inproc", poll_s=0.002)
+    # not started: submissions queue up and age
+    pool.submit(np.stack(CHUNKS[:1]))
+    pool.submit(np.stack(CHUNKS[1:2]))
+    g = pool.gauges()
+    assert g["queue_depth"] + g["in_flight"] == 2
+    assert g["oldest_age_s"] >= 0.0 and g["completed"] == 0
+    pool.start()
+    pool.drain(timeout_s=300.0)
+    assert pool.gauges()["queue_depth"] == 0
+    pool.shutdown()
+
+
+# ------------------------------------------------- continuous batcher
+
+def _sync_batcher(**kw):
+    """Batcher over the in-process plan (no pool): deterministic
+    single-threaded dispatch for policy tests."""
+    return ContinuousBatcher(plan=REF, **kw)
+
+def test_batcher_full_batch_dispatches_immediately():
+    clock = SettableClock()
+    b = _sync_batcher(max_batch=2, linger_s=10.0, clock=clock)
+    r0, r1 = b.submit(CHUNKS[0]), b.submit(CHUNKS[1])
+    done = b.pump()                       # full batch: no linger wait
+    assert sorted(done) == [r0, r1]
+    want = ref_sliced(CHUNKS[:2], 2)
+    for j, rid in enumerate((r0, r1)):
+        rec = b.result(rid)
+        assert rec["ok"]
+        np.testing.assert_array_equal(rec["keep"], want[j]["keep"])
+        np.testing.assert_array_equal(rec["cleaned"], want[j]["cleaned"])
+        assert b.result(rid) is None      # popped: exactly once
+
+def test_batcher_partial_batch_after_linger_zero_padded():
+    clock = SettableClock()
+    b = _sync_batcher(max_batch=4, linger_s=0.5, clock=clock)
+    rids = [b.submit(c) for c in CHUNKS[:3]]
+    assert b.pump() == []                 # partial + linger not elapsed
+    clock.t = 0.6
+    done = b.pump()                       # linger elapsed: serve partial
+    assert sorted(done) == sorted(rids)
+    (entry,) = b.batch_log
+    assert entry["n_real"] == 3 and entry["rows"] == 4  # pow2 bucket,
+    want = ref_sliced(CHUNKS[:3], 4)                    # zero-padded
+    for j, rid in enumerate(rids):
+        rec = b.result(rid)
+        assert rec["ok"]
+        np.testing.assert_array_equal(rec["keep"], want[j]["keep"])
+        np.testing.assert_array_equal(rec["cleaned"], want[j]["cleaned"])
+
+def test_batcher_pow2_occupancy_buckets():
+    clock = SettableClock()
+    b = _sync_batcher(max_batch=8, linger_s=0.0, clock=clock)
+    for n, rows in ((3, 4), (5, 8), (8, 8)):
+        for c in CHUNKS[:n]:
+            b.submit(c)
+        b.pump()
+        assert b.batch_log[-1]["rows"] == rows
+
+def test_batcher_deadline_expired_fails_and_never_dispatches():
+    clock = SettableClock()
+    b = _sync_batcher(max_batch=4, linger_s=0.2, clock=clock)
+    doomed = b.submit(CHUNKS[0], timeout_s=0.1)
+    live = b.submit(CHUNKS[1])
+    clock.t = 0.3                         # doomed expired, linger passed
+    done = b.pump()
+    assert sorted(done) == [doomed, live]
+    rec = b.result(doomed)
+    assert rec == {"ok": False, "error": "deadline",
+                   "waited_s": pytest.approx(0.3)}
+    assert b.result(doomed) is None
+    assert all(doomed not in e["rids"] for e in b.batch_log), \
+        "an expired request reached a dispatched batch"
+    assert b.result(live)["ok"]
+    assert b.expired == 1
+
+def test_batcher_late_result_not_served_stale():
+    """A request whose deadline passes while its batch computes is
+    failed at delivery: stale results are dropped, not served."""
+    clock = SettableClock()
+
+    class SlowPlan:
+        def __call__(self, batch):
+            clock.t += 10.0               # the batch "takes" 10 s
+            return REF(batch)
+
+    b = ContinuousBatcher(plan=SlowPlan(), max_batch=2, linger_s=0.0,
+                          clock=clock)
+    rid = b.submit(CHUNKS[0], timeout_s=5.0)
+    ok_rid = b.submit(CHUNKS[1])          # no deadline: still served
+    b.pump()
+    assert b.result(rid)["ok"] is False
+    assert b.result(ok_rid)["ok"] is True
+
+def test_batcher_admission_control_backpressure():
+    b = _sync_batcher(max_batch=4, max_queue=2, linger_s=10.0,
+                      clock=SettableClock())
+    b.submit(CHUNKS[0])
+    b.submit(CHUNKS[1])
+    with pytest.raises(AdmissionError):
+        b.submit(CHUNKS[2])
+    assert b.rejected == 1
+
+
+# ------------------------------------------------- pool + batcher + service
+
+def test_batcher_over_pool_concurrent_clients():
+    """4 client threads against a 2-worker inproc pool with the pump on
+    a background thread: every request resolves exactly once,
+    bit-identical to the reference slicing of its logged batch."""
+    with WorkerPool(cfg, workers=2, transport="inproc",
+                    poll_s=0.002) as pool:
+        b = ContinuousBatcher(pool=pool, max_batch=4, linger_s=0.01)
+        chunks_by_rid, records, lock = {}, {}, threading.Lock()
+
+        def client(cid):
+            for i in range(2):
+                c = CHUNKS[(cid * 2 + i) % len(CHUNKS)]
+                rid = b.submit(c)
+                with lock:
+                    chunks_by_rid[rid] = c
+                rec = b.wait(rid, timeout_s=300.0)
+                with lock:
+                    records[rid] = rec
+
+        with b:
+            ts = [threading.Thread(target=client, args=(c,))
+                  for c in range(4)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+        assert len(records) == 8 and all(r["ok"] for r in records.values())
+        for e in b.batch_log:
+            want = ref_sliced([chunks_by_rid[r] for r in e["rids"]],
+                              e["rows"])
+            for j, rid in enumerate(e["rids"]):
+                np.testing.assert_array_equal(records[rid]["keep"],
+                                              want[j]["keep"])
+                np.testing.assert_array_equal(records[rid]["cleaned"],
+                                              want[j]["cleaned"])
+
+def test_service_zero_pads_and_pops_results():
+    svc = PreprocessService(cfg, batch_long_chunks=4)
+    rids = [svc.submit(c) for c in CHUNKS[:3]]
+    assert sorted(svc.pump()) == sorted(rids)
+    want = ref_sliced(CHUNKS[:3], 4)      # zero-padded to the batch size
+    for j, rid in enumerate(rids):
+        rec = svc.result(rid)
+        np.testing.assert_array_equal(rec["keep"], want[j]["keep"])
+        np.testing.assert_array_equal(rec["cleaned"], want[j]["cleaned"])
+        assert svc.result(rid) is None    # popped: bounded result map
+
+def test_service_pool_path_and_cached_short_circuit(tmp_path):
+    """PreprocessService(pool=...): pumps go to the pool's persistent
+    workers; with a cached plan, a repeated batch is served from the
+    store WITHOUT touching a worker."""
+    with WorkerPool(cfg, workers=1, transport="inproc",
+                    poll_s=0.002) as pool:
+        svc = PreprocessService(cfg, plan="cached", store=str(tmp_path),
+                                batch_long_chunks=2, pool=pool)
+        rids = [svc.submit(c) for c in CHUNKS[:2]]
+        svc.pump()
+        miss = {rid: svc.result(rid) for rid in rids}
+        n_after_miss = pool.queue.n_items
+        assert n_after_miss == 1          # the miss went to the pool
+        rids2 = [svc.submit(c) for c in CHUNKS[:2]]
+        svc.pump()
+        assert pool.queue.n_items == n_after_miss, \
+            "a cached warm hit touched a worker"
+        assert svc.cache_stats.hits == 1
+        want = ref_sliced(CHUNKS[:2], 2)
+        for j, (rid, rid2) in enumerate(zip(rids, rids2)):
+            hit = svc.result(rid2)
+            np.testing.assert_array_equal(miss[rid]["keep"],
+                                          want[j]["keep"])
+            np.testing.assert_array_equal(hit["keep"], want[j]["keep"])
+            np.testing.assert_array_equal(hit["cleaned"],
+                                          want[j]["cleaned"])
+        assert sum(s.chunks_done for s in svc.worker_stats) == 1
+
+
+# ------------------------------------------------- proc-mode chaos
+
+@pytest.mark.slow
+def test_pool_proc_sigkill_redelivered_exactly_once():
+    """A 2-proc-worker pool with shard0 SIGKILLed the moment its first
+    lease is granted: the in-flight request is redelivered to the
+    survivor exactly once, results stay bit-identical, and the pool
+    reports the dead worker's reclaimed lease."""
+    from repro.ft.failure import CrashInjector
+
+    pool = WorkerPool(cfg, workers=2, transport="proc", respawn=False,
+                      poll_s=0.01).start()
+    try:
+        injector = CrashInjector()
+        injector.kill(0, after_items=0)
+        injector.attach(0, pool.pids[0])
+        pool.service.on_grant = lambda worker, wid: injector.on_pull(
+            pool.service.workers[worker].shard)
+        batches = {pool.submit(np.stack(CHUNKS[2 * k:2 * k + 2])):
+                   CHUNKS[2 * k:2 * k + 2] for k in range(3)}
+        got = pool.wait(list(batches), timeout_s=420.0)
+        assert sorted(got) == sorted(batches)
+        assert injector.crashed == frozenset({0})
+        assert pool.queue.redeliveries >= 1
+        assert pool.queue.redelivered_from["shard0"] >= 1
+        assert list(pool.pids) == [1], "only shard1 should survive"
+        for wid, res in got.items():
+            want = REF(np.stack(batches[wid]))
+            np.testing.assert_array_equal(np.asarray(res.det.keep),
+                                          np.asarray(want.det.keep))
+            np.testing.assert_array_equal(res.cleaned, want.cleaned)
+    finally:
+        pool.shutdown(drain=False)

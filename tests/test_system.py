@@ -30,10 +30,13 @@ def test_request_queue_serves_all():
     q = RequestQueue(eng, batch_size=3, prompt_len=8, n_tokens=4)
     rng = np.random.RandomState(1)
     rids = [q.submit(rng.randint(0, cfg.vocab_size, 8)) for _ in range(5)]
-    while any(q.result(r) is None for r in rids):
-        q.pump()
+    done = {}
+    while len(done) < len(rids):
+        for r in q.pump():
+            done[r] = q.result(r)
     for r in rids:
-        assert q.result(r).shape == (4,)
+        assert done[r].shape == (4,)
+        assert q.result(r) is None   # popped: handed over exactly once
 
 
 def test_token_loader_deterministic_resume():
