@@ -61,7 +61,7 @@ def run(minutes=16.0, batch_long_chunks=2, depths=(1, 2, 4, 8), seed=11):
 
     def tail_compiles():
         return sum(1 for k in JIT_CACHE.keys()
-                   if k[0] in ("tail", "tail_idx"))
+                   if k[0] in ("tail", "tail_idx", "tail_idx_fused"))
 
     rows, recs = [], []
     refs = [None, None]

@@ -33,7 +33,9 @@ def smoke():
     concurrent requests including one deadline miss and one worker
     SIGKILL mid-request — every surviving request must resolve exactly
     once, bit-identical to two_phase, with the killed worker's lease
-    redelivered."""
+    redelivered. Finally the FUSED-TAIL gate: two_phase with the fused
+    single-pass survivor tail vs the staged per-stage tail, bit-identical
+    masks + cleaned audio in ref AND interpret backends, pad rows zero."""
     import numpy as np
     from repro.configs import SERF_AUDIO as cfg
     from repro.core.plans import PLANS, Preprocessor
@@ -92,7 +94,12 @@ def smoke():
     except Exception:
         failures.append("serving")
         traceback.print_exc()
-    n_gates = len(PLANS) + 5
+    try:
+        _fused_smoke(np, cfg, Preprocessor)
+    except Exception:
+        failures.append("fused-tail")
+        traceback.print_exc()
+    n_gates = len(PLANS) + 6
     print(f"\nsmoke: {n_gates - len(failures)}/{n_gates} "
           f"gates OK" + (f"; FAILED: {failures}" if failures else ""))
     raise SystemExit(1 if failures else 0)
@@ -318,6 +325,44 @@ def _serving_smoke(np, cfg, Preprocessor):
         pool.shutdown(drain=False)
 
 
+def _fused_smoke(np, cfg, Preprocessor):
+    """Fused-survivor-tail gate: two_phase with the fused single-pass tail
+    vs two_phase with the staged per-stage tail on the same tiny stream —
+    survivor masks AND cleaned audio bit-identical in both the ref oracle
+    and interpret-kernel backends, and pad-index slots must come through
+    the fused kernel as exactly-zero rows (fill-gather semantics)."""
+    import jax.numpy as jnp
+    from repro.core.graph import PipelineGraph
+    from repro.data.loader import audio_batch_maker
+    from repro.kernels import backend
+
+    t0 = time.time()
+    make = audio_batch_maker(seed=9, batch_long_chunks=1)
+    stream = [(w, (make(w)[0], None)) for w in range(2)]
+    for mode in ("ref", "interpret"):
+        with backend.use(mode):
+            staged = Preprocessor(cfg, plan="two_phase", pad_multiple=1,
+                                  fuse_tail=False)
+            fused = Preprocessor(cfg, plan="two_phase", pad_multiple=1,
+                                 fuse_tail=True)
+            assert fused.plan.fuse_tail is True
+            for a, b in zip(staged.run(stream), fused.run(stream)):
+                np.testing.assert_array_equal(np.asarray(a.det.keep),
+                                              np.asarray(b.det.keep))
+                np.testing.assert_array_equal(a.cleaned, b.cleaned)
+    # pad rows: out-of-range survivor slots -> exactly-zero output rows
+    g = PipelineGraph(cfg)
+    rng = np.random.RandomState(0)
+    wave = jnp.asarray(rng.randn(4, cfg.final_split_samples)
+                       .astype(np.float32))
+    idx = jnp.asarray([2, 99, 0], jnp.int32)
+    with backend.use("ref"):
+        out = np.asarray(g.tail_indexed_fused(wave, idx))
+    assert not out[1].any() and out[0].any() and out[2].any()
+    print(f"plan fused-tail OK: fused == staged bit-identical (ref + "
+          f"interpret), pad rows zero, in {time.time() - t0:.1f}s")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -336,7 +381,7 @@ def main():
                             bench_load_balance, bench_utilization,
                             bench_early_exit, bench_cache,
                             bench_dispatch_depth, bench_queue_depth,
-                            bench_serving)
+                            bench_serving, bench_fused_tail)
     steps = [
         ("Table 1 / Fig 1: stage times",
          lambda: bench_stage_times.run(minutes=minutes)),
@@ -368,6 +413,8 @@ def main():
         ("Serving: worker pool + continuous batching p50/p99",
          lambda: bench_serving.run(
              minutes=6.0 if not args.full else 16.0)),
+        ("Kernel: fused survivor tail vs staged",
+         lambda: bench_fused_tail.run(reps=2 if not args.full else 4)),
     ]
     failures = []
     for name, fn in steps:

@@ -22,7 +22,11 @@
 #      already-expired deadline (must fail, never dispatch) and one
 #      worker SIGKILLed at its first lease grant (work redelivered): all
 #      surviving requests answered exactly once, bit-identical to
-#      two_phase
+#      two_phase —
+#      PLUS the fused-tail gate — two_phase with the fused single-pass
+#      survivor tail (gather+hpf+stft+mmse in one kernel) vs the staged
+#      per-stage tail: masks + cleaned audio bit-identical in both the
+#      ref and interpret backends, pad-index rows exactly zero
 #
 #   bash scripts/verify.sh [extra pytest args]
 set -euo pipefail

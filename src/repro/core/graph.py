@@ -46,6 +46,7 @@ from repro.core import detect as D
 from repro.core import indices as I
 from repro.core import stages as S
 from repro.distributed.sharding import NULL_RULES
+from repro.kernels.fused_tail import ops as fused_tail_ops
 
 
 class GraphValidationError(ValueError):
@@ -380,6 +381,26 @@ class Mmse(Stage):
         return state
 
 
+@register
+class TailHighpass(Stage):
+    """Stride-1 FIR high-pass on the survivor tail. The paper applies the
+    HPF once at long splits (folded into `compress`); declaring this stage
+    past the removal point re-sharpens survivors at the target rate and
+    completes the canonical fused tail hpf -> stft -> mmse -> istft."""
+    name = "hpf"
+
+    def check(self, vs):
+        self._need(vs, "wave")
+        if vs.geom.channels != 1:
+            raise GraphValidationError("stage 'hpf' needs mono audio")
+        return vs
+
+    def apply(self, state, rules):
+        wave = rules.constrain(state["wave"], "chunks", None)
+        state["wave"] = S.tail_highpass(wave, self.cfg)
+        return state
+
+
 # ------------------------------------------------------------------ graph
 
 class PipelineGraph:
@@ -476,6 +497,38 @@ class PipelineGraph:
         gather, so padding never duplicates real audio."""
         batch = jnp.take(wave, idx, axis=0, mode="fill", fill_value=0.0)
         return self.tail(batch, rules)
+
+    @property
+    def fused_tail_spec(self):
+        """`{"hpf": bool}` when the post-removal stage list is the
+        canonical fused tail — `("mmse",)` or `("hpf", "mmse")`, i.e.
+        [HPF ->] STFT -> MMSE gain -> iSTFT on survivors only — else
+        None. Plans consult this to decide whether `tail_indexed_fused`
+        may replace `tail_indexed` (any other survivor chain falls back
+        to the staged path)."""
+        if not self.removal_indices:
+            return None
+        post = self.names[self._cut():]
+        if post == ("mmse",):
+            return {"hpf": False}
+        if post == ("hpf", "mmse"):
+            return {"hpf": True}
+        return None
+
+    def tail_indexed_fused(self, wave, idx, rules=NULL_RULES):
+        """`tail_indexed` through the single fused Pallas pass
+        (kernels/fused_tail): gather-compact + [HPF] + STFT + MMSE gain
+        happen in one VMEM-resident kernel, with only the iSTFT outside.
+        Bit-identical to `tail_indexed` per backend mode; only valid when
+        `fused_tail_spec` is not None."""
+        spec = self.fused_tail_spec
+        if spec is None:
+            raise GraphValidationError(
+                f"post-removal stages {self.names[self._cut():]} are not "
+                "the canonical fused tail; use tail_indexed")
+        wave = rules.constrain(wave, "chunks", None)
+        return fused_tail_ops.fused_tail(wave, idx, self.cfg,
+                                         hpf=spec["hpf"])
 
     def fused(self, audio, rules=NULL_RULES) -> PipelineOutput:
         """Single-trace mode: the whole chain, removed chunks masked but

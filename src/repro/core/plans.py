@@ -88,6 +88,19 @@ the execution strategy. Six plans, and when to pick each:
                       Without a store it degrades to a transparent
                       pass-through of its inner plan.
 
+The two-phase family (`two_phase` / `streaming` / `async`) additionally
+owns the FUSED SURVIVOR TAIL switch. When the graph's post-removal chain
+is the canonical fused tail — `("mmse",)` or `("hpf", "mmse")`, per
+`PipelineGraph.fused_tail_spec` — the plan's survivor dispatch swaps the
+staged `tail_idx` phase for `tail_idx_fused`: one Pallas pass
+(`kernels/fused_tail`) doing gather-compact + [HPF] + STFT + MMSE gain
+with power/spec/gain tiles VMEM-resident, only the iSTFT outside. Keyed
+per pow2 survivor bucket in the same CompileCache, same donation rules,
+bit-identical per backend mode. `fuse_tail=` overrides: None (default)
+auto-engages on a canonical tail, False forces the staged path, True
+demands fusion and raises on a non-canonical tail. Any other survivor
+chain silently falls back to the staged per-stage dispatches.
+
 Serving sits ON TOP of these plans rather than being a seventh one: the
 batch-stream plans above amortize compile + dispatch over a stream that
 already exists, while `repro.serve` answers requests that arrive one at a
@@ -188,6 +201,8 @@ def _phase_fn(kind, graph: PipelineGraph, rules):
         return lambda w: graph.tail(w, rules)
     if kind == "tail_idx":
         return lambda w, i: graph.tail_indexed(w, i, rules)
+    if kind == "tail_idx_fused":
+        return lambda w, i: graph.tail_indexed_fused(w, i, rules)
     raise KeyError(f"unknown phase {kind!r}")
 
 
@@ -303,7 +318,7 @@ class TwoPhasePlan(ExecutionPlan):
     name = "two_phase"
 
     def __init__(self, graph, rules=NULL_RULES, pad_multiple=1,
-                 bucket="linear", donate=False):
+                 bucket="linear", donate=False, fuse_tail=None):
         super().__init__(graph, rules, pad_multiple)
         if not graph.has_removal_point:
             raise GraphValidationError(
@@ -315,6 +330,18 @@ class TwoPhasePlan(ExecutionPlan):
         if donate is None:                            # auto: off on CPU,
             donate = jax.default_backend() != "cpu"   # on where it pays
         self.donate = bool(donate)
+        # fused survivor tail (kernels/fused_tail): None = auto-engage
+        # whenever the graph's post-removal chain IS the canonical fused
+        # tail; True = require it (error otherwise); False = always staged
+        spec = graph.fused_tail_spec
+        if fuse_tail is None:
+            fuse_tail = spec is not None
+        elif fuse_tail and spec is None:
+            raise GraphValidationError(
+                f"fuse_tail=True but post-removal stages "
+                f"{graph.names[graph._cut():]} are not the canonical "
+                f"[hpf ->] mmse fused tail")
+        self.fuse_tail = bool(fuse_tail)
 
     def detect(self, audio) -> PipelineOutput:
         return _jitted("detect", self.graph, self.rules)(jnp.asarray(audio))
@@ -343,7 +370,8 @@ class TwoPhasePlan(ExecutionPlan):
         out, h2d = None, 0
         if n_real:
             donate = (0,) if self.donate else ()
-            tail = _jitted("tail_idx", self.graph, self.rules, donate,
+            kind = "tail_idx_fused" if self.fuse_tail else "tail_idx"
+            tail = _jitted(kind, self.graph, self.rules, donate,
                            shape=len(idx))
             out = tail(det.wave5, jnp.asarray(idx))   # async dispatch
             if hasattr(out, "copy_to_host_async"):
@@ -412,9 +440,10 @@ class AsyncPlan(TwoPhasePlan):
     name = "async"
 
     def __init__(self, graph, rules=NULL_RULES, pad_multiple=1, depth=2,
-                 bucket="pow2", donate=None, emit_buffer=1):
+                 bucket="pow2", donate=None, emit_buffer=1,
+                 fuse_tail=None):
         super().__init__(graph, rules, pad_multiple, bucket=bucket,
-                         donate=donate)
+                         donate=donate, fuse_tail=fuse_tail)
         self.depth = max(1, int(depth))
         # dispatched tails retained before emission: 1 double-buffers the
         # cleaned readback behind the next batch (+1 batch of emission
@@ -471,10 +500,11 @@ class StreamingPlan(AsyncPlan):
     name = "streaming"
 
     def __init__(self, graph, rules=NULL_RULES, pad_multiple=1, depth=1,
-                 bucket="linear", donate=False, emit_buffer=0):
+                 bucket="linear", donate=False, emit_buffer=0,
+                 fuse_tail=None):
         super().__init__(graph, rules, pad_multiple, depth=depth,
                          bucket=bucket, donate=donate,
-                         emit_buffer=emit_buffer)
+                         emit_buffer=emit_buffer, fuse_tail=fuse_tail)
 
 
 class ShardedPlan(TwoPhasePlan):

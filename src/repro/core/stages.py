@@ -88,6 +88,14 @@ def group_frames(power, n_groups, chunk_samples, cfg):
     return groups.reshape(B * n_groups, Fg, K)
 
 
+def tail_highpass(wave, cfg):
+    """Stride-1 FIR high-pass at the target rate — the survivor-tail
+    variant of the long-split HPF (Fig 2), re-applicable past the removal
+    point. wave: (B, S5) -> (B, S5)."""
+    return fir.highpass(wave, cfg.hpf_cutoff_hz, cfg.target_rate_hz,
+                        cfg.hpf_taps)
+
+
 def mmse_denoise(wave, cfg):
     """The dominant stage: STFT -> MMSE-STSA gain (Pallas) -> ISTFT.
 

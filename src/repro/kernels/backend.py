@@ -8,6 +8,14 @@ Modes:
   pallas    — force pallas_call (compiled on TPU, interpret on CPU).
   interpret — force interpret-mode pallas_call (kernel correctness tests).
   ref       — force the jnp oracle.
+
+The FUSED SURVIVOR TAIL (kernels/fused_tail) resolves through the same
+modes: when a two-phase-family plan detects the canonical post-removal
+chain ([hpf ->] mmse), its survivor dispatch becomes one fused pass whose
+backend follows resolve()/matmul_dft() exactly like the per-stage ops it
+replaces — ref oracle on CPU auto, pallas/interpret kernel when forced,
+bf16 matmul-DFT twin under "matmul" — so fused and staged stay
+bit-identical within every mode.
 """
 from __future__ import annotations
 

@@ -1,0 +1,218 @@
+"""Pallas TPU kernel: the fused survivor tail in one VMEM-resident pass.
+
+One `pallas_call` over grid (survivor_rows,) performs, per grid step:
+
+  gather-compact   the padded survivor-index vector rides as a SCALAR
+                   PREFETCH argument (`pltpu.PrefetchScalarGridSpec`), so
+                   the input BlockSpec's index_map DMAs exactly the one
+                   survivor row this step needs straight out of the full
+                   pre-denoise batch — the compacted batch is never
+                   materialised in HBM. Out-of-range pad indices are
+                   clamped for the DMA and zero-masked in VMEM, preserving
+                   `jnp.take(mode="fill")`'s zero-row pad convention
+                   bit-for-bit.
+  FIR high-pass    (optional) fir_hpf's per-tile tap accumulation, run as
+                   a lax.scan over FIR_TILE spans so the chain compiles
+                   once and its output materialises — the fused row is
+                   bitwise the staged `fir_pallas` row in every mode.
+  STFT             the 50%-overlap even/odd contiguous-reshape framing and
+                   windowed matmul-DFT of stft_dft's kernel, `frame_block`
+                   FRAME_TILE tiles per MXU dispatch (row-tiling a dot is
+                   bitwise-stable, so the block size is a pure perf knob).
+  MMSE-STSA        the sequential-over-frames decision-directed recurrence
+                   of mmse_stsa's kernel (same A&S i0e/i1e polynomials,
+                   same clip points), `bin_tile` lanes per scan.
+  gain apply       the filtered spectrum re*g / im*g is written packed;
+                   power, noise, and gain tiles never leave VMEM.
+
+Only the inverse-DFT overlap-add resynthesis stays OUTSIDE the kernel
+(`finish`): the staged pipeline's iSTFT is irfft-based in every non-matmul
+mode (stft_dft.ops.istft), and an in-kernel matmul iDFT could not be
+bit-identical to it — so the kernel hands the one (rows, F, PAD_OUT)
+filtered spectrum across the HBM boundary instead of the gathered wave,
+the raw spectrum, the power, the noise and the gain arrays the staged tail
+streams between its dispatches.
+
+VMEM per grid step at the SERF shape (S5=110250 -> S_pad=114816, F=896):
+row ~0.9 MB + frames 0.9 MB + basis 0.4 MB + packed out 1.4 MB + power/
+gain ~1.8 MB — ~5.5 MB, comfortably inside the ~16 MB/core budget the
+autotuner (ops.py) validates candidates against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.fir_hpf.kernel import OUT_TILE as FIR_TILE
+from repro.kernels.fir_hpf.ref import highpass_taps
+from repro.kernels.mmse_stsa.kernel import i0e_poly, i1e_poly
+from repro.kernels.mmse_stsa.ref import GAMMA_MAX, SQRTPI_2, XI_MIN
+from repro.kernels.stft_dft.kernel import FRAME_TILE, PAD_OUT, dft_basis
+from repro.kernels.stft_dft.ref import istft_ref
+
+
+def tail_geometry(S, window=256, hop=128):
+    """(n_tiles, S_pad, F, Fv) for an S-sample row: the tiling that
+    pad_for_stft + stft_pallas produce, shared by kernel and autotuner."""
+    tile_span = FRAME_TILE * hop
+    tail = window - hop
+    n_tiles = max(1, -(-(S - tail) // tile_span))
+    return (n_tiles, n_tiles * tile_span + tail, n_tiles * FRAME_TILE,
+            (S - window) // hop + 1)
+
+
+def _fused_tail_kernel(idx_ref, x_ref, basis_ref, o_ref, *, n_rows_in, S,
+                       window, hop, bins, alpha, gain_floor, noise_frames,
+                       taps, frame_block, bin_tile):
+    r = pl.program_id(0)
+    row = x_ref[0].astype(jnp.float32)
+
+    if taps is not None:
+        # causal FIR, stride 1: y[n] = sum_i g[i] * xp[n+i] with g the
+        # flipped taps — fir_hpf._fir_kernel's exact per-FIR_TILE chain,
+        # run as a lax.scan over tiles. The loop is load-bearing for
+        # bit-identity, not style: an unrolled whole-row tap chain is one
+        # giant elementwise graph that XLA duplicates per consumer (the
+        # framing slices below), and each duplicate contracts mul+add to
+        # FMA differently. The scan compiles the chain ONCE and
+        # materialises its output, so every consumer reads the same bits
+        # the staged fir_pallas produced.
+        T = len(taps)
+        g = np.asarray(taps, np.float32)[::-1]
+        n_ft = -(-S // FIR_TILE)
+        xp = jnp.concatenate([jnp.zeros((T - 1,), jnp.float32), row,
+                              jnp.zeros((n_ft * FIR_TILE - S,), jnp.float32)])
+        spans = jnp.stack([jax.lax.slice(xp, (t * FIR_TILE,),
+                                         (t * FIR_TILE + FIR_TILE + T - 1,))
+                           for t in range(n_ft)])
+
+        def fir_tile(carry, span):
+            acc = jnp.zeros((FIR_TILE,), jnp.float32)
+            for i in range(T):
+                acc = acc + g[i] * span[i:i + FIR_TILE]
+            return carry, acc
+
+        _, ys = jax.lax.scan(fir_tile, 0, spans)
+        row = ys.reshape(-1)[:S]
+
+    # fill-gather semantics: the BlockSpec index_map clamped this step's
+    # row id for the DMA; pad slots (idx >= n_rows_in) become zero rows.
+    # Masked AFTER the (linear) FIR — FIR(0)=0, so values match the
+    # staged take-then-filter order — keeping the predicate out of the
+    # tap chain's fusion context.
+    row = jnp.where(idx_ref[r] < n_rows_in, row, 0.0)
+
+    n_tiles, S_pad, F, Fv = tail_geometry(S, window, hop)
+    row = jnp.concatenate([row, jnp.zeros((S_pad - S,), jnp.float32)])
+
+    # framing: per tile the even/odd contiguous reshapes of
+    # stft_dft._stft_kernel (the boundary tail is the next span's head)
+    tile_span = FRAME_TILE * hop
+    half = FRAME_TILE // 2
+    frames = []
+    for t in range(n_tiles):
+        span = row[t * tile_span:(t + 1) * tile_span + (window - hop)]
+        even = span[:half * window].reshape(half, window)
+        odd = span[hop:hop + half * window].reshape(half, window)
+        frames.append(jnp.stack([even, odd], axis=1)
+                      .reshape(FRAME_TILE, window))
+    frames = jnp.concatenate(frames)                       # (F, window)
+
+    # windowed DFT as matmul, frame_block tiles per MXU dispatch
+    m = frame_block * FRAME_TILE
+    packed = jnp.concatenate(
+        [jnp.dot(frames[a:a + m], basis_ref[...],
+                 preferred_element_type=jnp.float32)
+         for a in range(0, F, m)])                         # (F, PAD_OUT)
+
+    re, im = packed[:, :bins], packed[:, bins:2 * bins]
+    power = re * re + im * im                              # (F, bins)
+    nf = min(noise_frames, Fv)
+    noise = jnp.mean(power[:nf], axis=0)                   # (bins,)
+
+    # decision-directed MMSE-STSA recurrence, bin_tile lanes per scan —
+    # the identical per-frame arithmetic of mmse_stsa._mmse_kernel; bins
+    # are padded to the lane tile (pad noise 1.0, as mmse_stsa.ops does)
+    KP = -(-bins // bin_tile) * bin_tile
+    powp = jnp.concatenate([power, jnp.zeros((F, KP - bins))], axis=1)
+    noisep = jnp.concatenate([noise, jnp.ones((KP - bins,))])
+    gains = []
+    for c in range(0, KP, bin_tile):
+        lam = jnp.maximum(noisep[c:c + bin_tile], 1e-10)
+        inv_lam = 1.0 / lam
+
+        def step(a2_prev, p_t):
+            gamma = jnp.clip(p_t * inv_lam, 1e-8, GAMMA_MAX)
+            xi = alpha * a2_prev \
+                + (1.0 - alpha) * jnp.maximum(gamma - 1.0, 0.0)
+            xi = jnp.maximum(xi, XI_MIN)
+            v = jnp.maximum(xi * gamma / (1.0 + xi), 1e-8)
+            gg = (SQRTPI_2 * jnp.sqrt(v) / gamma
+                  * ((1.0 + v) * i0e_poly(v / 2.0)
+                     + v * i1e_poly(v / 2.0)))
+            gg = jnp.clip(gg, 0.0, 10.0)
+            return (gg * gg) * gamma, jnp.maximum(gg, gain_floor)
+
+        _, gc = jax.lax.scan(step, jnp.ones((bin_tile,), jnp.float32),
+                             powp[:, c:c + bin_tile])
+        gains.append(gc)
+    gain = jnp.concatenate(gains, axis=1)[:, :bins]        # (F, bins)
+
+    o_ref[0] = jnp.concatenate(
+        [re * gain, im * gain, jnp.zeros((F, PAD_OUT - 2 * bins))], axis=1)
+
+
+def fused_tail_pallas(wave, idx, cfg, hpf=False, frame_block=2,
+                      bin_tile=128, interpret=False):
+    """wave: (B, S) f32 pre-denoise batch; idx: (R,) padded int32 survivor
+    indices. Returns the packed gain-filtered spectrum (R, F, PAD_OUT) —
+    feed to `finish` for the overlap-add resynthesis."""
+    B, S = wave.shape
+    R = idx.shape[0]
+    window, hop = cfg.stft_window, cfg.stft_hop
+    assert hop * 2 == window, "kernel exploits 50% overlap"
+    bins = window // 2 + 1
+    _, _, F, _ = tail_geometry(S, window, hop)
+    taps = highpass_taps(cfg.hpf_cutoff_hz, cfg.target_rate_hz,
+                         cfg.hpf_taps) if hpf else None
+    kernel = functools.partial(
+        _fused_tail_kernel, n_rows_in=B, S=S, window=window, hop=hop,
+        bins=bins, alpha=cfg.mmse_alpha, gain_floor=cfg.mmse_gain_floor,
+        noise_frames=cfg.noise_est_frames, taps=taps,
+        frame_block=int(frame_block), bin_tile=int(bin_tile))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(R,),
+        in_specs=[
+            # the gather: this step's survivor row, clamped for the DMA
+            # (the kernel zero-masks pad rows, matching the fill gather)
+            pl.BlockSpec((1, S),
+                         lambda r, idx_ref: (jnp.minimum(idx_ref[r], B - 1),
+                                             0)),
+            pl.BlockSpec((window, PAD_OUT), lambda r, idx_ref: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, F, PAD_OUT), lambda r, idx_ref: (r, 0, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, F, PAD_OUT), jnp.float32),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), wave.astype(jnp.float32),
+      dft_basis(window, jnp.float32))
+
+
+def finish(packed, S, cfg):
+    """Inverse-DFT overlap-add resynthesis of the kernel's packed filtered
+    spectrum: complexify, slice the valid frames, irfft-OLA — the same
+    istft_ref every staged non-matmul mode runs, so fused == staged
+    bitwise."""
+    bins = cfg.stft_window // 2 + 1
+    Fv = (S - cfg.stft_window) // cfg.stft_hop + 1
+    z = jax.lax.complex(packed[..., :bins], packed[..., bins:2 * bins])
+    return istft_ref(z[:, :Fv], S, cfg.stft_window, cfg.stft_hop)

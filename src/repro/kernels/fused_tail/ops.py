@@ -1,0 +1,156 @@
+"""Dispatch + autotuner for the fused survivor tail.
+
+`fused_tail` is the single public entry: backend-mode resolution follows
+kernels/backend.py exactly as the staged per-stage ops do —
+
+    ref / auto-on-CPU  ->  ref.fused_tail_ref      (jnp oracle)
+    matmul             ->  ref.fused_tail_matmul   (bf16 DFT dry-run twin)
+    pallas / interpret ->  kernel.fused_tail_pallas + kernel.finish
+    auto-on-TPU        ->  compiled kernel.fused_tail_pallas
+
+The kernel path takes a `TailConfig` (frame_block x bin_tile) chosen by
+the autotuner: `autotune` enumerates CANDIDATES, drops any whose additive
+f32 VMEM footprint model (`vmem_bytes`) exceeds the per-core budget,
+times the survivors (min-of-reps, block_until_ready) and caches the
+winner per (backend mode, survivor bucket, S, hpf). `best_config` is the
+hot-path accessor: tuned entry if present, else the first feasible
+candidate — it never probes, so plans can call it inside a jit trace
+without timing side effects.
+
+Every knob is a pure perf knob: frame_block only re-tiles the DFT dot's
+M dimension and bin_tile only re-chunks elementwise lanes, both of which
+are bitwise-stable — so the tuner can never change results, only speed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import backend
+from repro.kernels.fused_tail import kernel as K
+from repro.kernels.fused_tail import ref as R
+from repro.kernels.stft_dft.kernel import PAD_OUT
+
+VMEM_BUDGET = int(os.environ.get("REPRO_FUSED_VMEM_BYTES", 16 * 2 ** 20))
+
+
+@dataclasses.dataclass(frozen=True)
+class TailConfig:
+    frame_block: int = 2   # FRAME_TILE-tiles of frames per DFT dispatch
+    bin_tile: int = 128    # spectral lanes per MMSE scan
+
+
+CANDIDATES = tuple(TailConfig(fb, bt)
+                   for fb in (1, 2, 4, 8) for bt in (128, 256))
+
+
+def vmem_bytes(tc: TailConfig, S, window=256, hop=128, hpf=False,
+               hpf_taps=129) -> int:
+    """Additive f32 model of the kernel's per-grid-step VMEM residency."""
+    _, S_pad, F, _ = K.tail_geometry(S, window, hop)
+    bins = window // 2 + 1
+    KP = -(-bins // tc.bin_tile) * tc.bin_tile
+    n = S_pad                      # zero-padded row
+    if hpf:
+        n_ft = -(-S // K.FIR_TILE)
+        n += S + hpf_taps - 1                 # causal-padded input
+        n += n_ft * (K.FIR_TILE + hpf_taps - 1)  # stacked FIR spans
+        n += n_ft * K.FIR_TILE                # materialised scan output
+    n += F * window                # frames
+    n += window * PAD_OUT          # basis
+    n += tc.frame_block * 128 * PAD_OUT  # dot chunk in flight
+    n += F * PAD_OUT               # packed output block
+    n += F * (bins + KP)           # power + lane-padded power
+    n += F * KP + 2 * KP           # gains + lam/inv_lam
+    return 4 * n
+
+
+def feasible(S, window=256, hop=128, hpf=False, hpf_taps=129,
+             budget=None):
+    budget = VMEM_BUDGET if budget is None else budget
+    return [tc for tc in CANDIDATES
+            if vmem_bytes(tc, S, window, hop, hpf, hpf_taps) <= budget]
+
+
+# (backend mode, rows, S, hpf) -> TailConfig
+_TUNED: dict[tuple, TailConfig] = {}
+# same key -> [(TailConfig, seconds)] probe records, for benches/tests
+_PROBES: dict[tuple, list] = {}
+
+
+def _key(rows, S, hpf):
+    return (backend.get_mode(), int(rows), int(S), bool(hpf))
+
+
+def best_config(rows, S, cfg, hpf=False) -> TailConfig:
+    """Tuned winner if autotune ran for this key, else the first feasible
+    candidate. Never probes — safe on the dispatch hot path."""
+    tuned = _TUNED.get(_key(rows, S, hpf))
+    if tuned is not None:
+        return tuned
+    feas = feasible(S, cfg.stft_window, cfg.stft_hop, hpf, cfg.hpf_taps)
+    if not feas:
+        raise ValueError(
+            f"no VMEM-feasible fused-tail config for S={S} "
+            f"(budget {VMEM_BUDGET} bytes)")
+    default = TailConfig()
+    return default if default in feas else feas[0]
+
+
+def autotune(wave, idx, cfg, hpf=False, reps=2) -> TailConfig:
+    """Probe every VMEM-feasible candidate on (wave, idx), cache and
+    return the fastest. No-op (returns the cached winner) on a warm key."""
+    rows, S = idx.shape[0], wave.shape[1]
+    key = _key(rows, S, hpf)
+    if key in _TUNED:
+        return _TUNED[key]
+    use_pallas, interpret = backend.resolve()
+    feas = feasible(S, cfg.stft_window, cfg.stft_hop, hpf, cfg.hpf_taps)
+    if not feas:
+        raise ValueError(f"no VMEM-feasible fused-tail config for S={S}")
+    records = []
+    for tc in feas:
+        if use_pallas:
+            fn = jax.jit(lambda w, i, tc=tc: K.finish(
+                K.fused_tail_pallas(w, i, cfg, hpf, tc.frame_block,
+                                    tc.bin_tile, interpret=interpret),
+                w.shape[1], cfg))
+        else:
+            # ref path ignores tiling; probe once so records stay uniform
+            fn = jax.jit(lambda w, i: R.fused_tail_ref(w, i, cfg, hpf))
+        fn(wave, idx).block_until_ready()  # compile
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn(wave, idx).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        records.append((tc, best))
+        if not use_pallas:
+            break  # tiling is dead on the ref path; one probe suffices
+    records.sort(key=lambda r: r[1])
+    _PROBES[key] = records
+    _TUNED[key] = records[0][0]
+    return _TUNED[key]
+
+
+def clear_tuning():
+    _TUNED.clear()
+    _PROBES.clear()
+
+
+def fused_tail(wave, idx, cfg, hpf=False, tile: TailConfig | None = None):
+    """The fused survivor tail: (B, S) batch + (R,) padded survivor index
+    vector -> cleaned (R, S). Mode-dispatched like every staged op."""
+    if backend.matmul_dft():
+        return R.fused_tail_matmul(wave, idx, cfg, hpf)
+    use_pallas, interpret = backend.resolve()
+    if not use_pallas:
+        return R.fused_tail_ref(wave, idx, cfg, hpf)
+    tc = tile or best_config(idx.shape[0], wave.shape[1], cfg, hpf)
+    packed = K.fused_tail_pallas(wave, idx, cfg, hpf, tc.frame_block,
+                                 tc.bin_tile, interpret=interpret)
+    return K.finish(packed, wave.shape[1], cfg)

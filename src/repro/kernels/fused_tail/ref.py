@@ -1,0 +1,81 @@
+"""Pure-jnp oracle for the fused survivor tail — the bit-exactness anchor.
+
+`fused_tail_ref` is composed from the EXACT per-stage refs the staged tail
+dispatches under backend mode "ref":
+
+    take(mode="fill") gather  ->  fir_ref HPF (optional)  ->  pad_for_stft
+    ->  stft_ref[:, :Fv]  ->  |.|^2  ->  estimate_noise_psd
+    ->  mmse_stsa_gain_ref  ->  spec * gain  ->  istft_ref
+
+so staged-vs-fused bit-identity in ref mode holds BY CONSTRUCTION, and the
+Pallas kernel (kernel.py) is tested against this composition. The matmul
+twin mirrors the stage library under backend mode "matmul" (bf16 DFT
+streams — the dry-run cost model, not bit-compatible with ref).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.fir_hpf import ref as FR
+from repro.kernels.mmse_stsa import ref as MR
+from repro.kernels.stft_dft import ref as SR
+
+
+def _pad_for_stft(x, window, hop):
+    """Tile-aligned right pad — same arithmetic as stft_dft.ops.pad_for_stft
+    (duplicated here so ref.py stays import-free of the dispatching ops)."""
+    from repro.kernels.stft_dft.kernel import FRAME_TILE
+    B, S = x.shape
+    tile_span = FRAME_TILE * hop
+    tail = window - hop
+    n_tiles = max(1, -(-(S - tail) // tile_span))
+    target = n_tiles * tile_span + tail
+    if target > S:
+        x = jnp.pad(x, ((0, 0), (0, target - S)))
+    return x
+
+
+def gather_rows(wave, idx):
+    """The device-compaction gather with the scheduler's pad convention:
+    out-of-range indices (pad slots) become all-zero rows."""
+    return jnp.take(wave, idx, axis=0, mode="fill", fill_value=0.0)
+
+
+def fused_tail_ref(wave, idx, cfg, hpf=False):
+    """wave: (B, S) full pre-denoise batch; idx: (R,) padded int32 survivor
+    indices (scheduler.survivor_indices). Returns cleaned (R, S) f32."""
+    batch = gather_rows(wave, idx)
+    if hpf:
+        taps = FR.highpass_taps(cfg.hpf_cutoff_hz, cfg.target_rate_hz,
+                                cfg.hpf_taps)
+        batch = FR.fir_ref(batch, taps, 1)
+    S = batch.shape[1]
+    window, hop = cfg.stft_window, cfg.stft_hop
+    Fv = (S - window) // hop + 1
+    xp = _pad_for_stft(batch, window, hop)
+    spec = SR.stft_ref(xp, window, hop)[:, :Fv]
+    power = jnp.real(spec) ** 2 + jnp.imag(spec) ** 2
+    noise = MR.estimate_noise_psd(power, cfg.noise_est_frames)
+    gain = MR.mmse_stsa_gain_ref(power, noise, cfg.mmse_alpha,
+                                 cfg.mmse_gain_floor)
+    return SR.istft_ref(spec * gain.astype(spec.dtype), S, window, hop)
+
+
+def fused_tail_matmul(wave, idx, cfg, hpf=False):
+    """The backend-mode-"matmul" twin (SPMD-partitionable bf16 DFT streams),
+    mirroring what the staged tail computes under that mode."""
+    batch = gather_rows(wave, idx)
+    if hpf:
+        taps = FR.highpass_taps(cfg.hpf_cutoff_hz, cfg.target_rate_hz,
+                                cfg.hpf_taps)
+        batch = FR.fir_ref(batch, taps, 1)
+    S = batch.shape[1]
+    window, hop = cfg.stft_window, cfg.stft_hop
+    Fv = (S - window) // hop + 1
+    xp = _pad_for_stft(batch, window, hop)
+    spec = SR.stft_matmul(xp, window, hop)[:, :Fv]
+    power = jnp.real(spec) ** 2 + jnp.imag(spec) ** 2
+    noise = MR.estimate_noise_psd(power, cfg.noise_est_frames)
+    gain = MR.mmse_stsa_gain_ref(power, noise, cfg.mmse_alpha,
+                                 cfg.mmse_gain_floor)
+    return SR.istft_matmul(spec * gain.astype(spec.dtype), S, window, hop)

@@ -132,7 +132,8 @@ def test_bucketed_tail_compile_count():
         cap = int(np.asarray(res[0].det.keep).size)
         expect = {SCHED.quantize_survivors(n, cap, 1, bucket)
                   for n in counts if n}
-        got = {k[-1] for k in JIT_CACHE.keys() if k[0] == "tail_idx"}
+        got = {k[-1] for k in JIT_CACHE.keys()
+               if k[0] in ("tail_idx", "tail_idx_fused")}
         assert got == expect, (bucket, counts)
     assert len(set(counts)) > 1, "stream too uniform to exercise buckets"
 

@@ -102,3 +102,25 @@ def test_fir_frequency_response():
         out = np.asarray(FO.bandpass_decimate(tone))
         ratio = np.sqrt((out[:, 1000:] ** 2).mean()) / np.sqrt(0.5)
         assert (ratio > 0.9) == passband, (f0, ratio)
+
+
+# ------------------------------------------------------------- fused tail
+@pytest.mark.parametrize("hpf", [False, True])
+@pytest.mark.parametrize("n_tiles", [1, 2])
+def test_fused_tail_kernel_vs_composed_oracle(hpf, n_tiles):
+    """Interpret-mode fused pass vs the composed per-stage ref oracle —
+    the same allclose contract every per-kernel sweep above uses (bitwise
+    staged-vs-fused identity per mode lives in test_fused_tail.py)."""
+    from repro.configs import SERF_AUDIO as cfg
+    from repro.kernels.fused_tail import kernel as FTK, ref as FTR
+    rng = np.random.RandomState(10 * n_tiles + hpf)
+    S = n_tiles * FK.OUT_TILE // 16 * 128 + 256
+    wave = jnp.asarray(rng.randn(5, S).astype(np.float32) * 0.3)
+    idx = jnp.asarray([3, 0, 4, 7], jnp.int32)      # one pad slot
+    packed = FTK.fused_tail_pallas(wave, idx, cfg, hpf=hpf,
+                                   interpret=True)
+    got = FTK.finish(packed, S, cfg)
+    want = FTR.fused_tail_ref(wave, idx, cfg, hpf=hpf)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    assert not np.asarray(got[3]).any()             # pad row exactly zero
