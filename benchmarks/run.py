@@ -35,7 +35,11 @@ def smoke():
     once, bit-identical to two_phase, with the killed worker's lease
     redelivered. Finally the FUSED-TAIL gate: two_phase with the fused
     single-pass survivor tail vs the staged per-stage tail, bit-identical
-    masks + cleaned audio in ref AND interpret backends, pad rows zero."""
+    masks + cleaned audio in ref AND interpret backends, pad rows zero.
+    Finally the OBSERVABILITY gate: the driver over 2 real proc workers
+    with --trace + --telemetry must yield a schema-valid Chrome trace with
+    worker events parented under the master's run span and exactly one
+    durable telemetry record per chunk."""
     import numpy as np
     from repro.configs import SERF_AUDIO as cfg
     from repro.core.plans import PLANS, Preprocessor
@@ -99,7 +103,12 @@ def smoke():
     except Exception:
         failures.append("fused-tail")
         traceback.print_exc()
-    n_gates = len(PLANS) + 6
+    try:
+        _obs_smoke()
+    except Exception:
+        failures.append("obs")
+        traceback.print_exc()
+    n_gates = len(PLANS) + 7
     print(f"\nsmoke: {n_gates - len(failures)}/{n_gates} "
           f"gates OK" + (f"; FAILED: {failures}" if failures else ""))
     raise SystemExit(1 if failures else 0)
@@ -363,6 +372,70 @@ def _fused_smoke(np, cfg, Preprocessor):
           f"interpret), pad rows zero, in {time.time() - t0:.1f}s")
 
 
+def _obs_smoke():
+    """Observability gate: the real driver (`launch.preprocess`) over 2
+    REAL proc workers with `--trace` + `--telemetry` must produce (a) a
+    schema-valid Chrome trace (validate_chrome_trace: required keys, known
+    phases, X events carry dur, B/E balance LIFO per pid/tid) in which
+    worker-process events carry a different pid than the master AND are
+    parented under the master's run span across the pickle boundary, and
+    (b) exactly ONE durable telemetry 'done' record per chunk, written
+    master-side at acceptance with an accept timestamp."""
+    import json
+    import os
+    import shutil
+    import tempfile
+
+    from repro.launch import preprocess as launch_pre
+    from repro.obs import telemetry as obs_telemetry
+    from repro.obs import tracing as obs_tracing
+
+    t0 = time.time()
+    n_batches = 2          # --minutes 4 / --batch-long-chunks 2
+    tmp = tempfile.mkdtemp(prefix="smoke_obs_")
+    trace_path = os.path.join(tmp, "trace.json")
+    tdir = os.path.join(tmp, "telemetry")
+    prev_tracer = obs_tracing.get_tracer()
+    try:
+        launch_pre.main([
+            "--minutes", "4", "--batch-long-chunks", "2",
+            "--plan", "sharded", "--transport", "proc", "--shards", "2",
+            "--trace", trace_path, "--telemetry", tdir])
+        with open(trace_path) as f:
+            data = json.load(f)
+        counts = obs_tracing.validate_chrome_trace(data)
+        events = data["traceEvents"]
+        trace_id = data["otherData"]["trace_id"]
+        run_span = trace_id + ":0"
+        master_pid = os.getpid()
+        roots = [e for e in events
+                 if e["name"] == "preprocess_run" and e["ph"] == "B"]
+        assert len(roots) == 1 and roots[0]["pid"] == master_pid \
+            and roots[0]["args"]["span"] == run_span
+        worker_evs = [e for e in events if e["pid"] != master_pid]
+        assert worker_evs, "no worker-process events reached the trace"
+        assert all(e["args"].get("trace") == trace_id for e in worker_evs)
+        # 'E' closers carry no parent by design; every opener/complete must
+        assert all(e["args"].get("parent") == run_span
+                   for e in worker_evs if e["ph"] != "E"), \
+            "worker events not parented under the master run span"
+        assert any(e["name"] == "compute" for e in worker_evs)
+
+        recs = obs_telemetry.read_records(tdir)
+        done = [r for r in recs if r.get("status") == "done"]
+        wids = sorted(r["wid"] for r in done)
+        assert wids == list(range(n_batches)), \
+            f"telemetry done records not exactly-once per chunk: {wids}"
+        assert all(r.get("accept_ts") and r.get("worker") for r in done)
+        print(f"plan obs        OK: proc run traced ({len(events)} events, "
+              f"phases {counts}), {len(worker_evs)} worker events parented "
+              f"under the run span, {len(done)}/{n_batches} telemetry "
+              f"records exactly once, in {time.time() - t0:.1f}s")
+    finally:
+        obs_tracing.set_tracer(prev_tracer)
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -381,7 +454,8 @@ def main():
                             bench_load_balance, bench_utilization,
                             bench_early_exit, bench_cache,
                             bench_dispatch_depth, bench_queue_depth,
-                            bench_serving, bench_fused_tail)
+                            bench_serving, bench_fused_tail,
+                            bench_obs_overhead)
     steps = [
         ("Table 1 / Fig 1: stage times",
          lambda: bench_stage_times.run(minutes=minutes)),
@@ -415,6 +489,8 @@ def main():
              minutes=6.0 if not args.full else 16.0)),
         ("Kernel: fused survivor tail vs staged",
          lambda: bench_fused_tail.run(reps=2 if not args.full else 4)),
+        ("Observability: off/metrics/full overhead",
+         lambda: bench_obs_overhead.run(reps=2 if not args.full else 4)),
     ]
     failures = []
     for name, fn in steps:

@@ -26,7 +26,14 @@
 #      PLUS the fused-tail gate — two_phase with the fused single-pass
 #      survivor tail (gather+hpf+stft+mmse in one kernel) vs the staged
 #      per-stage tail: masks + cleaned audio bit-identical in both the
-#      ref and interpret backends, pad-index rows exactly zero
+#      ref and interpret backends, pad-index rows exactly zero —
+#      PLUS the observability gate — the launch driver over 2 REAL proc
+#      workers with --trace + --telemetry: the Chrome trace must pass
+#      the repro.obs schema check (required keys, known phases, X events
+#      carry dur, B/E balance LIFO per pid/tid) with worker-process
+#      events parented under the master's run span across the pickle
+#      boundary, and the durable telemetry JSONL must hold exactly ONE
+#      master-side 'done' record per chunk
 #
 #   bash scripts/verify.sh [extra pytest args]
 set -euo pipefail

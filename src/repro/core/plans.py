@@ -113,6 +113,32 @@ PreprocessService` checks a `CachedPlan`-style store before ever touching
 a worker. Any batch the serving tier dispatches runs the same `two_phase`
 stages as the plans here and stays bit-identical to them.
 
+Observability (`repro.obs`): every plan family reports into the one
+process-local metrics registry and the run tracer, zero-cost when both
+are off. What each plan emits and where it lands:
+
+  * counters/histograms (`obs.metrics`, via `_record_batch` at each
+    plan's emission point): `plan_batches_total` / `plan_chunks_total` /
+    `plan_survivors_total` / `plan_src_bytes_total` and
+    `plan_{d2h,h2d}_bytes_total`, all labeled `{plan=...}`, plus the
+    `plan_stage_seconds{plan,stage}` histogram fed from the same numbers
+    the per-batch `BatchResult.timings` dict carries (the dict stays —
+    it is the per-batch view, the registry is the aggregate).
+    `AsyncPlan.last_timings` is now a bounded ring (`TIMINGS_CAP`).
+  * spans (`obs.tracing`, visible in Perfetto): `detect_dispatch`
+    (async window fill), `tail` (mask readback + compaction + tail
+    dispatch), `emit` (blocking cleaned readback), `fused_batch`;
+    ShardedPlan's proc master additionally marks `accept` (result
+    accepted at the completion gate) and `emit_gated` instants, whose
+    gap makes straggler-blocked emission visible. Worker processes
+    record their own lease/fetch_many/compute/push spans (see
+    `repro.dist.worker`) parented under the master's run span.
+  * durable per-chunk telemetry (`obs.telemetry`): pass `telemetry=`
+    (a TelemetryWriter) to ShardedPlan — both transports hand it to
+    their QueueService, which writes lease/fetch/push/acceptance
+    records master-side; redeliveries are attributed via
+    `WorkQueue.on_redeliver`.
+
 All plans sit behind the `Preprocessor` facade, and all jitted phases live
 in one keyed LRU `CompileCache`. Keys are *value* fingerprints — config,
 stage list, `ShardingRules.fingerprint` (mesh shape + rule table + device
@@ -144,6 +170,8 @@ from repro.dist.service import QueueService, pack_result, unpack_result
 from repro.dist.transport import ProcTransport
 from repro.distributed.sharding import NULL_RULES
 from repro.kernels import backend
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
 from repro.store import ChunkStore, RunJournal, content_key
 
 
@@ -241,6 +269,47 @@ class BatchResult:
     #   tail_rows / n_real      padded tail batch rows vs real survivors
 
 
+# Cap on retained per-batch timing dicts (`AsyncPlan.last_timings`): long-
+# lived streams used to grow this list without bound; the registry now
+# keeps the aggregate view, so the attribute is a bounded recent-history
+# ring.
+TIMINGS_CAP = 4096
+
+_STAGE_KEYS = ("dispatch_s", "readback_s", "compact_s", "tail_s", "emit_s")
+
+
+def _record_batch(plan_name, res: "BatchResult"):
+    """Mirror one emitted batch into the metrics registry — counters for
+    volume, histograms for the per-stage timings that previously lived
+    only in the ad-hoc `BatchResult.timings` dict. The dict itself stays
+    on the result (callers depend on it); this is the aggregate view."""
+    reg = obs_metrics.get_registry()
+    if not reg.enabled:
+        return
+    lab = {"plan": plan_name}
+    reg.counter("plan_batches_total", "batches emitted",
+                ("plan",)).labels(**lab).inc()
+    if res.det is not None:
+        reg.counter("plan_chunks_total", "chunks processed",
+                    ("plan",)).labels(**lab).inc(int(np.size(res.det.keep)))
+    reg.counter("plan_survivors_total", "chunks surviving detection",
+                ("plan",)).labels(**lab).inc(int(res.n_kept))
+    reg.counter("plan_src_bytes_total", "input bytes consumed",
+                ("plan",)).labels(**lab).inc(int(res.src_bytes))
+    t = res.timings
+    if not t:
+        return
+    for k in _STAGE_KEYS:
+        if k in t:
+            reg.histogram("plan_stage_seconds", "per-batch stage wall time",
+                          ("plan", "stage")).labels(
+                plan=plan_name, stage=k[:-2]).observe(t[k])
+    for k in ("d2h_bytes", "h2d_bytes"):
+        if k in t:
+            reg.counter(f"plan_{k}_total", "host-boundary traffic",
+                        ("plan",)).labels(**lab).inc(int(t[k]))
+
+
 class _StreamMeta:
     """Internal marker for ShardedPlan's plain-stream wrapper: carries the
     ORIGINAL stream wid + labels through the queue as the item's `extra`,
@@ -292,12 +361,15 @@ class FusedPlan(ExecutionPlan):
     name = "fused"
 
     def __call__(self, audio) -> BatchResult:
-        x = jnp.asarray(audio)
-        out = _jitted("fused", self.graph, self.rules)(x)
-        keep = np.asarray(out.keep)
-        cleaned = np.asarray(out.wave5)[keep]
-        return BatchResult(cleaned=cleaned, det=out, n_kept=int(keep.sum()),
-                           src_bytes=int(x.nbytes))
+        with obs_tracing.span("fused_batch"):
+            x = jnp.asarray(audio)
+            out = _jitted("fused", self.graph, self.rules)(x)
+            keep = np.asarray(out.keep)
+            cleaned = np.asarray(out.wave5)[keep]
+        res = BatchResult(cleaned=cleaned, det=out, n_kept=int(keep.sum()),
+                          src_bytes=int(x.nbytes))
+        _record_batch(self.name, res)
+        return res
 
 
 @dataclass
@@ -361,6 +433,11 @@ class TwoPhasePlan(ExecutionPlan):
         pre-denoise waveform never crosses the host boundary. With
         `donate` the wave5 buffer is donated to the tail gather, so the
         det record's wave5 must not be read after this call."""
+        with obs_tracing.span("tail", wid=wid):
+            return self._start_tail_inner(det, wid, extra, src_bytes,
+                                          timings)
+
+    def _start_tail_inner(self, det, wid, extra, src_bytes, timings):
         t0 = time.perf_counter()
         keep = np.asarray(det.keep)                   # the only readback
         t1 = time.perf_counter()
@@ -395,11 +472,12 @@ class TwoPhasePlan(ExecutionPlan):
         result. Padded rows are sliced off here — and they are zero rows
         from the fill gather, never repeats of real audio."""
         t0 = time.perf_counter()
-        if pend.out is None:
-            cleaned = np.zeros((0, pend.det.wave5.shape[-1]), np.float32)
-        else:
-            cleaned = np.asarray(pend.out)[:pend.n_real]
-            pend.timings["d2h_bytes"] += pend.out.nbytes
+        with obs_tracing.span("emit", wid=pend.wid):
+            if pend.out is None:
+                cleaned = np.zeros((0, pend.det.wave5.shape[-1]), np.float32)
+            else:
+                cleaned = np.asarray(pend.out)[:pend.n_real]
+                pend.timings["d2h_bytes"] += pend.out.nbytes
         pend.timings["emit_s"] = time.perf_counter() - t0
         # the pre-device-compaction boundary for THIS batch: full wave5 +
         # mask down, the LINEAR-padded survivor batch up, the same padded
@@ -412,10 +490,12 @@ class TwoPhasePlan(ExecutionPlan):
         pend.timings["old_boundary_bytes"] = (
             pend.timings["wave5_bytes"] + pend.det.keep.size
             + 2 * lin_rows * row_bytes)
-        return BatchResult(cleaned=cleaned, det=pend.det,
-                           n_kept=pend.n_real, wid=pend.wid,
-                           labels=pend.extra, src_bytes=pend.src_bytes,
-                           timings=pend.timings)
+        res = BatchResult(cleaned=cleaned, det=pend.det,
+                          n_kept=pend.n_real, wid=pend.wid,
+                          labels=pend.extra, src_bytes=pend.src_bytes,
+                          timings=pend.timings)
+        _record_batch(self.name, res)
+        return res
 
     def _finish(self, det: PipelineOutput, wid=None, extra=None,
                 src_bytes=0, timings=None):
@@ -450,10 +530,12 @@ class AsyncPlan(TwoPhasePlan):
         # latency and one extra resident batch); 0 emits each result the
         # moment its tail is dispatched (the pre-PR streaming schedule)
         self.emit_buffer = max(0, int(emit_buffer))
-        self.last_timings = []
+        # bounded ring: the registry holds the aggregate (plan_stage_seconds
+        # et al. via _record_batch); this keeps only recent history
+        self.last_timings = collections.deque(maxlen=TIMINGS_CAP)
 
     def run(self, batches):
-        self.last_timings = []
+        self.last_timings = collections.deque(maxlen=TIMINGS_CAP)
         dets = collections.deque()       # detect window (<= depth)
         tails = collections.deque()      # dispatched tails (<= 2)
 
@@ -467,12 +549,13 @@ class AsyncPlan(TwoPhasePlan):
 
         for wid, chunks, extra in _iter_batches(batches):
             t0 = time.perf_counter()
-            owned = not isinstance(chunks, jax.Array)
-            x = jnp.asarray(chunks)
-            det = self._detect_donated(x) if owned and self.donate \
-                else self.detect(x)                   # async dispatch
-            if hasattr(det.keep, "copy_to_host_async"):
-                det.keep.copy_to_host_async()         # prefetch the mask
+            with obs_tracing.span("detect_dispatch", wid=wid):
+                owned = not isinstance(chunks, jax.Array)
+                x = jnp.asarray(chunks)
+                det = self._detect_donated(x) if owned and self.donate \
+                    else self.detect(x)               # async dispatch
+                if hasattr(det.keep, "copy_to_host_async"):
+                    det.keep.copy_to_host_async()     # prefetch the mask
             timings = {"dispatch_s": time.perf_counter() - t0,
                        "in_flight": len(dets) + 1}
             dets.append((det, wid, extra, int(x.nbytes), timings))
@@ -551,7 +634,8 @@ class ShardedPlan(TwoPhasePlan):
     def __init__(self, graph, rules=NULL_RULES, pad_multiple=1, shards=2,
                  lease_items=1, injector=None, monitor=None,
                  transport="inproc", worker_poll_s=0.05,
-                 stall_timeout_s=300.0, lease_timeout_s=None):
+                 stall_timeout_s=300.0, lease_timeout_s=None,
+                 telemetry=None):
         self.shards = max(1, int(shards))
         if isinstance(rules, (list, tuple)):
             if len(rules) != self.shards:
@@ -575,6 +659,10 @@ class ShardedPlan(TwoPhasePlan):
         # (~minute on CPU), so a healthy compiling worker must not blow
         # its deadline; the simulated loop keeps the WorkQueue default.
         self.lease_timeout_s = lease_timeout_s
+        # optional repro.obs.telemetry.TelemetryWriter: handed to the
+        # QueueService both transports build, which writes durable
+        # per-chunk records master-side at lease/fetch/push/acceptance
+        self.telemetry = telemetry
         self._transport_kind()          # validate early, not mid-stream
         self.rebalancer = SCHED.Rebalancer(self.shards, pad_multiple)
         self.redeliveries = 0           # mirrored off the queue after run()
@@ -614,9 +702,11 @@ class ShardedPlan(TwoPhasePlan):
             waves_keeps, [k for _, k in waves_keeps],
             live=[j for j, _ in dets])
         self.last_assignment = asg
-        return BatchResult(cleaned=cleaned, det=det,
-                           n_kept=int(np.asarray(det.keep).sum()),
-                           src_bytes=int(x.nbytes))
+        res = BatchResult(cleaned=cleaned, det=det,
+                          n_kept=int(np.asarray(det.keep).sum()),
+                          src_bytes=int(x.nbytes))
+        _record_batch(self.name, res)
+        return res
 
     def _rebalanced_tail(self, item_waves_keeps, shard_keeps, live):
         """Rebalanced phase B. item_waves_keeps: [(wave5, keep)] per
@@ -624,6 +714,11 @@ class ShardedPlan(TwoPhasePlan):
         mask per LIVE shard (same packed order) — the assignment is made
         per shard, survivors are packed per item. Returns (cleaned rows in
         packed survivor order, ShardAssignment)."""
+        with obs_tracing.span("tail_rebalanced", live=len(live)):
+            return self._rebalanced_tail_inner(item_waves_keeps,
+                                               shard_keeps, live)
+
+    def _rebalanced_tail_inner(self, item_waves_keeps, shard_keeps, live):
         asg = self.rebalancer.assign(shard_keeps, out_shards=len(live))
         surv = [w[k] for w, k in item_waves_keeps if k.any()]
         if not surv:
@@ -697,7 +792,8 @@ class ShardedPlan(TwoPhasePlan):
 
     # -- in-proc master: the historical simulated round loop ----------------
     def _run_sim(self, pool, queue):
-        service = QueueService(queue, monitor=self.monitor)
+        service = QueueService(queue, monitor=self.monitor,
+                               telemetry=self.telemetry)
         # every queue mutation flows through the service (pure delegation
         # under the queue's own lock, so behavior is bit-for-bit the old
         # direct path) and the per-worker ledger accrues as in proc mode
@@ -792,7 +888,8 @@ class ShardedPlan(TwoPhasePlan):
 
         service = QueueService(queue, fetch_item=fetch,
                                setup=self._proc_setup(),
-                               monitor=self.monitor)
+                               monitor=self.monitor,
+                               telemetry=self.telemetry)
         tp = self.transport if not isinstance(self.transport, str) \
             else ProcTransport()
         handles = {}
@@ -849,8 +946,14 @@ class ShardedPlan(TwoPhasePlan):
             for worker, wid, payload in drained:
                 if not queue.complete([wid]):
                     continue        # redelivery raced a straggler
-                service.note_done(worker)    # accepted == counted
-                buffered[wid] = unpack_result(payload)
+                det, f = unpack_result(payload)
+                # accepted == counted; acceptance is ALSO the durable
+                # telemetry point (note_done writes the per-chunk record
+                # master-side, so it survives a SIGKILLed worker)
+                service.note_done(worker, wid=wid, survivors=f["n_kept"],
+                                  bytes_out=f["cleaned"].nbytes)
+                obs_tracing.instant("accept", wid=wid, worker=worker)
+                buffered[wid] = (det, f)
             progressed = bool(drained)
             while emit_i < len(order) and order[emit_i] in buffered:
                 wid = order[emit_i]
@@ -861,9 +964,16 @@ class ShardedPlan(TwoPhasePlan):
                 extra = extras.pop(wid, None)
                 orig_wid, labels = (extra.wid, extra.labels) \
                     if isinstance(extra, _StreamMeta) else (wid, extra)
-                yield BatchResult(cleaned=f["cleaned"], det=det,
+                # emission gating made visible: the gap between a chunk's
+                # "accept" instant and this one is time spent buffered
+                # behind a straggler (ascending-wid emission order)
+                obs_tracing.instant("emit_gated", wid=wid,
+                                    buffered=len(buffered))
+                res = BatchResult(cleaned=f["cleaned"], det=det,
                                   n_kept=f["n_kept"], wid=orig_wid,
                                   labels=labels, src_bytes=f["src_bytes"])
+                _record_batch(self.name, res)
+                yield res
             if emit_i >= len(order) or progressed:
                 continue
             # no progress this tick: look for dead workers to reclaim
@@ -938,15 +1048,20 @@ class ShardedPlan(TwoPhasePlan):
         for i, (shard, wid, det, extra, nbytes) in enumerate(round_work):
             if not service.complete([wid]):
                 continue             # redelivery raced a straggler: emitted once
-            service.note_done(f"shard{shard}")
+            cleaned = cleaned_all[offs[i]:offs[i + 1]]
+            service.note_done(f"shard{shard}", wid=wid,
+                              survivors=int(offs[i + 1] - offs[i]),
+                              bytes_out=cleaned.nbytes)
             if self._release is not None:
                 self._release(wid, None)     # drop the buffered stream item
             orig_wid, labels = (extra.wid, extra.labels) \
                 if isinstance(extra, _StreamMeta) else (wid, extra)
-            yield BatchResult(
-                cleaned=cleaned_all[offs[i]:offs[i + 1]], det=det,
+            res = BatchResult(
+                cleaned=cleaned, det=det,
                 n_kept=int(offs[i + 1] - offs[i]), wid=orig_wid,
                 labels=labels, src_bytes=nbytes)
+            _record_batch(self.name, res)
+            yield res
 
 
 class _SizedIter:
@@ -1054,9 +1169,13 @@ class CachedPlan(ExecutionPlan):
 
     def _result(self, arrays, meta, wid, extra) -> BatchResult:
         det, f = unpack_result({**arrays, **meta})
-        return BatchResult(cleaned=f["cleaned"], det=det,
-                           n_kept=f["n_kept"], wid=wid, labels=extra,
-                           src_bytes=f["src_bytes"])
+        res = BatchResult(cleaned=f["cleaned"], det=det,
+                          n_kept=f["n_kept"], wid=wid, labels=extra,
+                          src_bytes=f["src_bytes"])
+        # store hits bypass the inner plan, so they are counted here —
+        # misses are counted at the inner plan's own emission point
+        _record_batch(self.name, res)
+        return res
 
     # -- single batch (the warm-cache serving path) -------------------------
     def __call__(self, audio) -> BatchResult:

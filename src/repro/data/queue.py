@@ -63,6 +63,11 @@ class WorkQueue:
         # who HELD the lease that had to be redelivered — the launch
         # driver's per-worker summary reads this.
         self.redelivered_from = collections.Counter()
+        # Optional hook fired (under the queue lock) whenever a lease is
+        # reclaimed: on_redeliver(wid, worker, reason) with reason
+        # "expired" (deadline passed) or "failed" (fail_worker).
+        # repro.obs wires this to durable telemetry + redelivery counters.
+        self.on_redeliver = None
 
     # -- worker API ---------------------------------------------------------
     def lease(self, worker, max_items=1):
@@ -124,10 +129,13 @@ class WorkQueue:
         now = self.clock()
         expired = [wid for wid, l in self._leases.items() if l.deadline < now]
         for wid in expired:
-            self.redelivered_from[self._leases[wid].worker] += 1
+            worker = self._leases[wid].worker
+            self.redelivered_from[worker] += 1
             del self._leases[wid]
             self._pending.append(wid)
             self.redeliveries += 1
+            if self.on_redeliver is not None:
+                self.on_redeliver(wid, worker, "expired")
 
     def next_deadline(self):
         """Earliest outstanding lease deadline (None when nothing is
@@ -146,6 +154,8 @@ class WorkQueue:
                 del self._leases[wid]
                 self._pending.append(wid)
                 self.redeliveries += 1
+                if self.on_redeliver is not None:
+                    self.on_redeliver(wid, worker, "failed")
             self.redelivered_from[worker] += len(back)
             return back
 

@@ -18,19 +18,25 @@ threads and the master loop interleave safely.
 from __future__ import annotations
 
 import collections
+import hashlib
+import os
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from repro.core.graph import PipelineOutput
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
 
 # The complete remote surface. A transport must refuse anything else —
 # the service object carries master-side state (result inbox, kill hooks)
-# that workers have no business reaching.
+# that workers have no business reaching. `metrics` is read-only: a
+# snapshot of the master's registry (scrape endpoint over the transport).
 RPC_METHODS = frozenset({
     "hello", "lease", "fetch", "fetch_many", "complete", "push_result",
     "heartbeat", "fail_worker", "state", "progress", "finished",
-    "next_deadline", "bye",
+    "next_deadline", "bye", "metrics",
 })
 
 
@@ -71,16 +77,28 @@ class QueueService:
                   worker needs to build its jits (cfg, stage names,
                   pad_multiple, bucket, kernel backend mode)
       monitor     optional ft.failure.HeartbeatMonitor fed on heartbeats
+      telemetry   optional repro.obs.telemetry.TelemetryWriter — per-chunk
+                  records written MASTER-side at acceptance/redelivery so
+                  they survive SIGKILLed workers
     """
 
-    def __init__(self, queue, fetch_item=None, setup=None, monitor=None):
+    def __init__(self, queue, fetch_item=None, setup=None, monitor=None,
+                 telemetry=None):
         self.queue = queue
         self._fetch_item = fetch_item
         self._setup = dict(setup or {})
         self.monitor = monitor
+        self.telemetry = telemetry
         self.workers: dict[str, WorkerStats] = {}
         self.lease_calls = 0
         self._results = collections.deque()
+        # per-chunk event times (lease/fetch/push, content key), keyed by
+        # wid; popped into a durable telemetry record at acceptance.
+        self._timeline: dict[int, dict] = {}
+        # Observe redeliveries at the source: the queue fires this under
+        # its own lock for BOTH reclaim paths (expiry and fail_worker),
+        # including direct fail_worker calls on the raw queue.
+        queue.on_redeliver = self._on_redeliver
         # master-side hook, called INSIDE lease() once per granted work id
         # with (worker, wid): the CrashInjector's process-mode trigger — a
         # doomed worker is SIGKILLed while its fresh lease is registered
@@ -104,18 +122,72 @@ class QueueService:
         if self.monitor is not None:
             self.monitor.beat(worker)
 
-    def note_done(self, worker, n=1):
+    def note_done(self, worker, n=1, wid=None, survivors=None,
+                  bytes_out=None):
+        """Credit accepted work to `worker`. Callers that know WHICH chunk
+        was accepted pass `wid` (+ survivor count / output bytes): that is
+        the acceptance point, so the durable per-chunk telemetry record —
+        with the full lease→fetch→push→accept timeline — is written here,
+        master-side, exactly once per chunk (acceptance is gated on
+        `WorkQueue.complete` returning the id as newly-done)."""
         with self.queue.lock:
-            self._w(worker).chunks_done += n
+            st = self._w(worker)
+            st.chunks_done += n
+            obs_metrics.counter(
+                "dist_chunks_done_total",
+                "results accepted by the master", ("worker",)
+            ).labels(worker=worker).inc(n)
+            if self.telemetry is not None and wid is not None:
+                tl = self._timeline.pop(wid, {})
+                self.telemetry.record(
+                    event="chunk", status="done", wid=int(wid),
+                    worker=worker, shard=st.shard, pid=st.pid,
+                    content_key=tl.get("content_key"),
+                    lease_ts=tl.get("lease_ts"), fetch_ts=tl.get("fetch_ts"),
+                    push_ts=tl.get("push_ts"), accept_ts=time.time(),
+                    survivors=None if survivors is None else int(survivors),
+                    bytes_in=tl.get("bytes_in"),
+                    bytes_out=None if bytes_out is None else int(bytes_out),
+                    redelivered=int(tl.get("redelivered", 0)))
+
+    def _on_redeliver(self, wid, worker, reason):
+        """Queue-level reclaim hook (fires under the queue lock): count
+        the redelivery and durably attribute the LOSING incarnation, so a
+        SIGKILLed worker's half-processed chunk shows both attempts."""
+        obs_metrics.counter(
+            "dist_redeliveries_total", "leases reclaimed",
+            ("worker", "reason")).labels(worker=worker, reason=reason).inc()
+        if self.telemetry is None:
+            return
+        st = self.workers.get(worker)
+        tl = self._timeline.get(wid, {})
+        self.telemetry.record(
+            event="chunk", status="redelivered", reason=reason,
+            wid=int(wid), worker=worker,
+            shard=st.shard if st else -1, pid=st.pid if st else None,
+            content_key=tl.get("content_key"),
+            lease_ts=tl.get("lease_ts"), fetch_ts=tl.get("fetch_ts"))
+        # the next lease of this wid starts a fresh timeline but keeps the
+        # redelivery count, so the eventual "done" record carries it
+        self._timeline[wid] = {"redelivered": tl.get("redelivered", 0) + 1}
 
     # -- RPC surface --------------------------------------------------------
     def hello(self, worker, pid=None, shard=-1):
-        """Worker sign-in: registers identity, returns the setup blob."""
+        """Worker sign-in: registers identity, returns the setup blob.
+        When the master has a live tracer, its propagation context (trace
+        id + run-span parent id) rides along under "trace" — that is how
+        worker-side spans get parented under the master's run span across
+        the pickle boundary."""
         with self.queue.lock:
             st = self._w(worker)
             st.pid, st.shard = pid, int(shard)
             st.last_beat = self.queue.clock()
-        return self._setup
+        prop = obs_tracing.get_tracer().propagate()
+        if prop is None:
+            return self._setup
+        setup = dict(self._setup)
+        setup["trace"] = prop
+        return setup
 
     def lease(self, worker, max_items=1):
         with self.queue.lock:
@@ -125,6 +197,19 @@ class QueueService:
             st.leased_total += len(ids)
             st.last_beat = self.queue.clock()
             self.lease_calls += 1
+            obs_metrics.counter(
+                "dist_lease_calls_total", "queue round-trips",
+                ("worker",)).labels(worker=worker).inc()
+            if ids:
+                obs_metrics.counter(
+                    "dist_leased_ids_total", "work ids granted",
+                    ("worker",)).labels(worker=worker).inc(len(ids))
+            if self.telemetry is not None and ids:
+                now = time.time()
+                for wid in ids:
+                    tl = self._timeline.setdefault(wid, {})
+                    tl["lease_ts"] = now
+                    tl["worker"] = worker
         if self.monitor is not None:
             self.monitor.beat(worker)
         hook = self.on_grant
@@ -138,7 +223,16 @@ class QueueService:
         if self._fetch_item is None:
             raise RuntimeError("this QueueService serves no data plane "
                                "(no fetch_item)")
-        return self._fetch_item(wid)
+        item = self._fetch_item(wid)
+        if self.telemetry is not None and item is not None:
+            raw = np.ascontiguousarray(item)
+            with self.queue.lock:
+                tl = self._timeline.setdefault(wid, {})
+                tl["fetch_ts"] = time.time()
+                tl["bytes_in"] = int(raw.nbytes)
+                tl["content_key"] = hashlib.sha256(
+                    raw.tobytes()).hexdigest()[:16]
+        return item
 
     def fetch_many(self, worker, wids):
         """Batched data plane: one round-trip for a whole lease batch
@@ -164,6 +258,11 @@ class QueueService:
             self.queue.heartbeat_extend(worker)
             self._w(worker).last_beat = self.queue.clock()
             self._results.append((worker, wid, payload))
+            obs_metrics.counter(
+                "dist_pushes_total", "results pushed (pre-acceptance)",
+                ("worker",)).labels(worker=worker).inc()
+            if self.telemetry is not None:
+                self._timeline.setdefault(wid, {})["push_ts"] = time.time()
         if self.monitor is not None:
             self.monitor.beat(worker)
         return True
@@ -194,13 +293,24 @@ class QueueService:
 
     def bye(self, worker, stats=None):
         """Worker sign-off with its idle/busy split (per-worker idle time
-        is a Table 7 observable: deeper lease batches shrink it)."""
+        is a Table 7 observable: deeper lease batches shrink it). A worker
+        that traced locally ships its buffered span events here
+        (stats["spans"]) — the master merges them into its tracer, which
+        is how worker spans cross the pickle boundary."""
         with self.queue.lock:
             st = self._w(worker)
             for k in ("idle_s", "busy_s"):
                 if stats and k in stats:
                     setattr(st, k, float(stats[k]))
+        if stats and stats.get("spans"):
+            obs_tracing.get_tracer().add_events(stats["spans"])
         return True
+
+    def metrics(self, render=False):
+        """Read-only scrape of the master's metrics registry: a JSON/
+        pickle-safe snapshot, or Prometheus text when `render` is set."""
+        reg = obs_metrics.get_registry()
+        return reg.render() if render else reg.snapshot()
 
     # -- master-side (NOT served) -------------------------------------------
     def pop_results(self):

@@ -35,6 +35,7 @@ import threading
 from multiprocessing.connection import Client, Listener
 
 from repro.dist.service import RPC_METHODS
+from repro.obs import metrics as obs_metrics
 
 AUTHKEY_ENV = "REPRO_DIST_AUTHKEY"
 
@@ -195,12 +196,20 @@ class ProcTransport:
                 if method not in RPC_METHODS:
                     msg = (False, f"method {method!r} is not served")
                 else:
+                    obs_metrics.counter(
+                        "dist_rpc_calls_total",
+                        "proc-transport RPCs served, by method",
+                        ("method",)).labels(method=method).inc()
                     try:
                         attr = getattr(service, method)
                         val = attr(*args, **kwargs) if callable(attr) \
                             else attr
                         msg = (True, val)
                     except Exception as e:          # ship, don't crash
+                        obs_metrics.counter(
+                            "dist_rpc_errors_total",
+                            "RPCs that raised on the master",
+                            ("method",)).labels(method=method).inc()
                         msg = (False, f"{type(e).__name__}: {e}")
                 try:
                     conn.send(msg)

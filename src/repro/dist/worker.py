@@ -55,6 +55,20 @@ def run_worker(master, shard, lease_items=1, poll_s=0.05, transport=None,
     proxy = transport.connect(master)
     worker = f"shard{int(shard)}"
     spec = proxy.call("hello", worker, os.getpid(), int(shard))
+    # Trace propagation: when the master runs a tracer, `hello` carries
+    # its trace id + run-span parent. The worker traces locally into its
+    # own buffer (own pid, master's parent) and ships the events back in
+    # `bye` — a SIGKILLed worker simply loses its spans, never the run.
+    from repro.obs import tracing as obs_tracing
+    tracer = obs_tracing.NULL_TRACER
+    if spec.get("trace"):
+        tracer = obs_tracing.Tracer(**spec["trace"])
+        # Install globally (so plan-internal spans land in it) only in a
+        # real worker process. In-proc workers share the master's process:
+        # there the master's tracer IS the global one and already catches
+        # plan spans — replacing it would clobber the run.
+        if not obs_tracing.get_tracer().enabled:
+            obs_tracing.set_tracer(tracer)
     if spec.get("backend_mode"):
         backend.set_mode(spec["backend_mode"])
     graph = PipelineGraph(spec["cfg"], spec.get("stages"),
@@ -68,6 +82,7 @@ def run_worker(master, shard, lease_items=1, poll_s=0.05, transport=None,
     done = 0
     while max_items is None or done < max_items:
         t0 = time.perf_counter()
+        w0 = time.time()
         ids = proxy.call("lease", worker, lease_items)
         if not ids:
             if proxy.call("finished"):
@@ -77,7 +92,12 @@ def run_worker(master, shard, lease_items=1, poll_s=0.05, transport=None,
             idle += time.perf_counter() - t0
             time.sleep(poll_s)
             continue
+        # `X` complete events, recorded only for NON-empty iterations so
+        # an idle worker's poll loop does not flood the trace
+        tracer.complete("lease", w0, worker=worker, ids=ids)
+        w1 = time.time()
         items = list(zip(ids, proxy.call("fetch_many", worker, ids)))
+        tracer.complete("fetch_many", w1, worker=worker, n=len(ids))
         idle += time.perf_counter() - t0
         for wid, chunks in items:
             if chunks is None:
@@ -86,6 +106,7 @@ def run_worker(master, shard, lease_items=1, poll_s=0.05, transport=None,
                 # nothing to compute, the master already has the result
                 continue
             t1 = time.perf_counter()
+            w2 = time.time()
             # a heartbeat per item bounds lease-expiry exposure to ONE
             # item's compute time (first-item jit compiles are the long
             # pole), not the whole lease batch
@@ -93,11 +114,17 @@ def run_worker(master, shard, lease_items=1, poll_s=0.05, transport=None,
             res = plan(np.asarray(chunks, np.float32))
             payload = pack_result(res)
             busy += time.perf_counter() - t1
+            tracer.complete("compute", w2, worker=worker, wid=wid,
+                            n_kept=int(res.n_kept))
             t2 = time.perf_counter()
+            w3 = time.time()
             proxy.call("push_result", worker, wid, payload)
+            tracer.complete("push", w3, worker=worker, wid=wid)
             idle += time.perf_counter() - t2
             done += 1
     stats = {"idle_s": idle, "busy_s": busy, "chunks": done}
+    if tracer.enabled:
+        stats["spans"] = tracer.drain()
     try:
         proxy.call("bye", worker, stats)
     finally:

@@ -45,6 +45,9 @@ from repro.core.scheduler import balance_stats
 from repro.data.loader import AudioChunkLoader, audio_shard_pool
 from repro.distributed.sharding import ShardingRules, pool_rules
 from repro.launch.mesh import make_local_mesh
+from repro.obs import metrics as obs_metrics
+from repro.obs import telemetry as obs_telemetry
+from repro.obs import tracing as obs_tracing
 
 _FRAC_KEYS = ("frac_rain", "frac_silence", "frac_kept", "frac_cicada15")
 
@@ -84,6 +87,14 @@ def main(argv=None):
     ap.add_argument("--store-max-bytes", type=int, default=None,
                     help="after the run, evict least-recently-hit store "
                          "entries until the payload fits this budget")
+    ap.add_argument("--telemetry", default=None, metavar="DIR",
+                    help="write one durable JSONL telemetry record per "
+                         "chunk (master-side, at acceptance — survives "
+                         "killed workers) into DIR")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(load in chrome://tracing or Perfetto); sharded "
+                         "proc workers ship their spans back at sign-off")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.resume and not args.store:
@@ -147,6 +158,17 @@ def main(argv=None):
         plan = args.plan
         loader = AudioChunkLoader(seed=args.seed, n_batches=n_batches,
                                   batch_long_chunks=args.batch_long_chunks)
+    telem = (obs_telemetry.TelemetryWriter(args.telemetry)
+             if args.telemetry else None)
+    tracer = None
+    if args.trace:
+        tracer = obs_tracing.Tracer()
+        obs_tracing.set_tracer(tracer)
+        tracer.start_run("preprocess_run")
+    if telem is not None and plan == "sharded":
+        # the sharded plan's QueueService writes the records itself, at
+        # master-side acceptance — a SIGKILLed worker cannot lose them
+        plan_kwargs["telemetry"] = telem
     pre = Preprocessor(cfg, rules, plan=plan, pad_multiple=pad,
                        **plan_kwargs)
 
@@ -155,7 +177,7 @@ def main(argv=None):
     last_keep = None
     timings = []
     t0 = time.time()
-    for res in pre.run(loader):
+    for i, res in enumerate(pre.run(loader)):
         w = float(res.det.stats["n_chunks5"])    # weight: chunks in batch
         for k in _FRAC_KEYS:
             agg[k] += float(res.det.stats[k]) * w
@@ -165,7 +187,22 @@ def main(argv=None):
         last_keep = res.det.keep
         if res.timings is not None:
             timings.append(res.timings)
+        if telem is not None and plan != "sharded":
+            # single-process plans have no acceptance point but this loop
+            wid = res.wid if res.wid is not None else i
+            obs_telemetry.record_result(telem, wid, res)
     dt = time.time() - t0
+    if tracer is not None:
+        tracer.finish_run()
+        tracer.save(args.trace)
+        print(f"trace: {len(tracer.events)} events -> {args.trace}")
+    if telem is not None:
+        telem.close()
+        print(f"telemetry: {telem.records_written} records -> "
+              f"{args.telemetry}")
+    if args.trace or args.telemetry:
+        for line in obs_metrics.summary_lines():
+            print("metrics:", line)
     cached = pre.plan if plan == "cached" else None
     exec_plan = cached.inner if cached is not None else pre.plan
     if tot_chunks == 0:

@@ -62,12 +62,23 @@ def _lm_main(args):
 def _audio_main(args):
     from repro.configs import SERF_AUDIO as cfg
     from repro.data.loader import audio_batch_maker
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import telemetry as obs_telemetry
+    from repro.obs import tracing as obs_tracing
     from repro.serve import ContinuousBatcher, WorkerPool
 
+    telem = (obs_telemetry.TelemetryWriter(args.telemetry)
+             if args.telemetry else None)
+    tracer = None
+    if args.trace:
+        tracer = obs_tracing.Tracer()
+        obs_tracing.set_tracer(tracer)
+        tracer.start_run("serve_run")
     make = audio_batch_maker(seed=args.seed, batch_long_chunks=1)
     pool = WorkerPool(cfg, workers=args.pool_workers,
                       transport=args.pool_transport,
-                      poll_s=args.poll_ms / 1e3).start()
+                      poll_s=args.poll_ms / 1e3,
+                      telemetry=telem).start()
     batcher = ContinuousBatcher(pool=pool, max_batch=args.max_batch,
                                 max_queue=args.max_queue,
                                 linger_s=args.linger_ms / 1e3)
@@ -95,6 +106,14 @@ def _audio_main(args):
     wall = time.time() - t0
     pool.shutdown(drain=True)
 
+    if tracer is not None:
+        tracer.finish_run()
+        tracer.save(args.trace)
+        print(f"trace: {len(tracer.events)} events -> {args.trace}")
+    if telem is not None:
+        telem.close()
+        print(f"telemetry: {telem.records_written} records -> "
+              f"{args.telemetry}")
     ok = [l for l, good in lat if good]
     print(f"served {len(ok)}/{len(lat)} requests in {wall:.1f}s "
           f"({len(ok) / wall:.2f} req/s)")
@@ -104,6 +123,9 @@ def _audio_main(args):
     print(f"batcher: {batcher.stats()}")
     print("workers:", [(s.worker, s.pid, s.chunks_done)
                        for s in pool.worker_stats])
+    if args.trace or args.telemetry:
+        for line in obs_metrics.summary_lines():
+            print("metrics:", line)
     return lat
 
 
@@ -134,7 +156,15 @@ def main(argv=None):
     ap.add_argument("--poll-ms", type=float, default=5.0)
     ap.add_argument("--timeout-s", type=float, default=None,
                     help="per-request deadline (default: none)")
+    ap.add_argument("--telemetry", default=None, metavar="DIR",
+                    help="audio mode: durable per-chunk JSONL telemetry, "
+                         "written master-side at acceptance")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="audio mode: Chrome trace-event JSON of the "
+                         "serving run (requests appear as async spans)")
     args = ap.parse_args(argv)
+    if (args.telemetry or args.trace) and not args.audio:
+        ap.error("--telemetry/--trace instrument the audio serving tier")
     return _audio_main(args) if args.audio else _lm_main(args)
 
 

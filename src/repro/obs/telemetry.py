@@ -1,0 +1,171 @@
+"""Durable per-chunk telemetry: crash-safe JSONL records + aggregation.
+
+Every chunk that moves through a leased queue leaves records written
+MASTER-side (the paper's master is the only box guaranteed to survive a
+slave crash), at the moments the master learns something:
+
+  * status "done"        — written at `complete` acceptance
+    (`QueueService.note_done`), carrying the full lease→fetch→push→accept
+    timeline, worker/shard/pid, content key, survivor count and bytes
+    moved.  Exactly one per chunk id, because acceptance is gated on
+    `WorkQueue.complete` returning the id as newly-done.
+  * status "redelivered" — written when a lease is reclaimed
+    (`WorkQueue.on_redeliver`: reason "expired" for lease-timeout, reason
+    "failed" for `fail_worker`), attributing the LOSING incarnation, so a
+    SIGKILLed worker's half-processed chunk shows both attempts.
+
+Records survive SIGKILLed workers by construction (workers never write
+them) and survive a killed master up to the last flushed line: each
+record is a single buffered `write()` of one line followed by `flush()`,
+and the reader skips a torn trailing line.
+
+`worker_ledger` aggregates records into the paper's Figure-style
+per-worker load view (chunks, survivors, bytes, redeliveries, span of
+acceptance times).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import threading
+import time
+
+
+class TelemetryWriter:
+    """Append-only JSONL writer, one file per writing process."""
+
+    def __init__(self, directory, name=None, fsync=False):
+        self.directory = str(directory)
+        os.makedirs(self.directory, exist_ok=True)
+        fname = name or f"telemetry-{os.getpid()}.jsonl"
+        self.path = os.path.join(self.directory, fname)
+        self._fsync = fsync
+        self._lock = threading.Lock()
+        self._f = open(self.path, "a", encoding="utf-8")
+        self.records_written = 0
+
+    def record(self, **fields):
+        fields.setdefault("ts", time.time())
+        line = json.dumps(fields, separators=(",", ":"), default=_json_safe)
+        with self._lock:
+            if self._f.closed:
+                return
+            self._f.write(line + "\n")
+            self._f.flush()
+            if self._fsync:
+                os.fsync(self._f.fileno())
+            self.records_written += 1
+
+    def close(self):
+        with self._lock:
+            if not self._f.closed:
+                self._f.flush()
+                self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+def _json_safe(obj):
+    for cast in (int, float):
+        try:
+            return cast(obj)
+        except (TypeError, ValueError):
+            continue
+    return str(obj)
+
+
+def record_result(writer, wid, res, worker="master"):
+    """Acceptance record for a result emitted OUTSIDE a queue service
+    (single-process plans in the launch driver, benches): same shape as
+    the master-side "done" records, minus the RPC timeline."""
+    if writer is None:
+        return
+    writer.record(event="chunk", status="done", wid=int(wid),
+                  worker=worker, pid=os.getpid(), accept_ts=time.time(),
+                  survivors=int(getattr(res, "n_kept", 0)),
+                  bytes_in=int(getattr(res, "src_bytes", 0)),
+                  bytes_out=int(getattr(res, "cleaned", None).nbytes
+                                if getattr(res, "cleaned", None) is not None
+                                else 0))
+
+
+# ------------------------------------------------------------------ read
+
+def read_records(path):
+    """Load every record under `path` (a directory of *.jsonl, or one
+    file).  A torn trailing line — the writing process died mid-write —
+    is skipped, not fatal; a torn line anywhere else raises."""
+    if os.path.isdir(path):
+        files = sorted(glob.glob(os.path.join(path, "*.jsonl")))
+    else:
+        files = [path]
+    records = []
+    for fp in files:
+        with open(fp, encoding="utf-8") as f:
+            lines = f.read().splitlines()
+        for i, line in enumerate(lines):
+            if not line.strip():
+                continue
+            try:
+                records.append(json.loads(line))
+            except ValueError:
+                if i == len(lines) - 1:
+                    continue    # torn tail: writer was killed mid-line
+                raise
+    return records
+
+
+def chunk_ledger(records):
+    """Per-chunk view: {wid: {"statuses": [...], "workers": [...],
+    "survivors": int|None, "done": bool}} in record order."""
+    out = {}
+    for r in records:
+        if r.get("event") != "chunk":
+            continue
+        wid = r.get("wid")
+        c = out.setdefault(wid, {"statuses": [], "workers": [],
+                                 "survivors": None, "done": False})
+        c["statuses"].append(r.get("status"))
+        if r.get("worker") is not None:
+            c["workers"].append(r.get("worker"))
+        if r.get("status") == "done":
+            c["done"] = True
+            c["survivors"] = r.get("survivors")
+    return out
+
+
+def worker_ledger(records):
+    """The Figure-style per-worker load ledger: how many chunks each
+    worker actually carried, what it produced, and what it dropped."""
+    out = {}
+
+    def w(name):
+        return out.setdefault(name, {
+            "chunks_done": 0, "survivors": 0, "bytes_in": 0, "bytes_out": 0,
+            "redelivered_from": 0, "first_accept_ts": None,
+            "last_accept_ts": None})
+
+    for r in records:
+        if r.get("event") != "chunk":
+            continue
+        name = r.get("worker") or "?"
+        entry = w(name)
+        if r.get("status") == "done":
+            entry["chunks_done"] += 1
+            entry["survivors"] += int(r.get("survivors") or 0)
+            entry["bytes_in"] += int(r.get("bytes_in") or 0)
+            entry["bytes_out"] += int(r.get("bytes_out") or 0)
+            ts = r.get("accept_ts")
+            if ts is not None:
+                if entry["first_accept_ts"] is None:
+                    entry["first_accept_ts"] = ts
+                entry["last_accept_ts"] = ts
+        elif r.get("status") == "redelivered":
+            entry["redelivered_from"] += 1
+    return out

@@ -44,6 +44,14 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core import scheduler as SCHED
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
+
+# batch_log used to grow one record per dispatched batch for the life of
+# the service; the metrics registry now keeps the aggregate (occupancy /
+# wait histograms, dispatch counters), so the attribute is a bounded
+# recent-history ring with the same read surface (iteration, indexing).
+BATCH_LOG_CAP = 1024
 
 
 class AdmissionError(RuntimeError):
@@ -75,7 +83,9 @@ class ContinuousBatcher:
         self._inflight = {}     # pool wid -> (requests, padded_rows)
         self._results = {}      # rid -> record (popped by result())
         self._next_id = 0
-        self.batch_log = []     # per-dispatch occupancy records
+        # ring of per-dispatch occupancy records (aggregates live in the
+        # metrics registry — see BATCH_LOG_CAP)
+        self.batch_log = collections.deque(maxlen=BATCH_LOG_CAP)
         self.rejected = 0       # admission-control refusals
         self.expired = 0        # deadline failures (waiting or delivery)
         self._thread = None
@@ -94,6 +104,9 @@ class ContinuousBatcher:
                 len(reqs) for reqs, _ in self._inflight.values())
             if depth >= self.max_queue:
                 self.rejected += 1
+                obs_metrics.counter(
+                    "batcher_rejected_total",
+                    "requests refused by admission control").inc()
                 raise AdmissionError(
                     f"queue full ({depth}/{self.max_queue} requests "
                     f"waiting or in flight)")
@@ -101,6 +114,12 @@ class ContinuousBatcher:
             self._next_id += 1
             deadline = None if timeout_s is None else now + float(timeout_s)
             self._waiting.append(_Request(rid, x, deadline, now))
+        obs_metrics.counter("batcher_requests_total",
+                            "requests admitted").inc()
+        # request lifetime as an async span pair: submit here, resolve in
+        # _deliver/_expire — a request may start and finish on different
+        # threads, which plain B/E nesting cannot express
+        obs_tracing.get_tracer().async_begin("request", rid)
         return rid
 
     def result(self, rid):
@@ -164,9 +183,14 @@ class ContinuousBatcher:
         for r in self._waiting:
             if r.deadline is not None and now > r.deadline:
                 self.expired += 1
+                obs_metrics.counter(
+                    "batcher_expired_total",
+                    "requests failed on deadline").inc()
                 self._results[r.rid] = {
                     "ok": False, "error": "deadline",
                     "waited_s": now - r.submit_t}
+                obs_tracing.get_tracer().async_end("request", r.rid,
+                                                   ok=False)
                 done.append(r.rid)
             else:
                 alive.append(r)
@@ -196,6 +220,15 @@ class ContinuousBatcher:
             "rids": [r.rid for r in reqs], "n_real": n_real,
             "rows": size, "occupancy": n_real / size,
             "waited_s": waited})
+        reg = obs_metrics.get_registry()
+        if reg.enabled:
+            reg.counter("batcher_batches_total", "batches dispatched").inc()
+            reg.histogram(
+                "batcher_occupancy", "real rows / padded rows per batch",
+                buckets=obs_metrics.OCCUPANCY_BUCKETS).observe(n_real / size)
+            reg.histogram("batcher_wait_seconds",
+                          "oldest-request linger at dispatch").observe(waited)
+        obs_tracing.instant("batch_dispatch", n_real=n_real, rows=size)
         return reqs, padded, n_real
 
     def _deliver(self, reqs, rows, res):
@@ -212,13 +245,20 @@ class ContinuousBatcher:
         offs = np.concatenate([[0], np.cumsum(keep)]).astype(int)
         now = self.clock()
         out = []
+        tracer = obs_tracing.get_tracer()
+        latency_h = obs_metrics.histogram(
+            "serve_request_latency_seconds", "submit-to-delivery latency")
         with self._lock:
             for j, r in enumerate(reqs):
                 if r.deadline is not None and now > r.deadline:
                     self.expired += 1
+                    obs_metrics.counter(
+                        "batcher_expired_total",
+                        "requests failed on deadline").inc()
                     self._results[r.rid] = {
                         "ok": False, "error": "deadline",
                         "waited_s": now - r.submit_t}
+                    tracer.async_end("request", r.rid, ok=False)
                 else:
                     lo, hi = j * per, (j + 1) * per
                     self._results[r.rid] = {
@@ -227,6 +267,8 @@ class ContinuousBatcher:
                         "silence": silence[lo:hi],
                         "cleaned": res.cleaned[offs[lo]:offs[hi]],
                         "latency_s": now - r.submit_t}
+                    latency_h.observe(now - r.submit_t)
+                    tracer.async_end("request", r.rid, ok=True)
                 out.append(r.rid)
         return out
 

@@ -43,6 +43,7 @@ from repro.dist.service import QueueService, unpack_result
 from repro.dist.transport import InProcTransport, ProcTransport
 from repro.dist.worker import run_worker
 from repro.kernels import backend
+from repro.obs import metrics as obs_metrics
 
 
 class WorkerPool:
@@ -73,7 +74,7 @@ class WorkerPool:
     def __init__(self, cfg, workers=2, transport="proc", stages=None,
                  source_channels=2, pad_multiple=1, bucket="pow2",
                  lease_items=1, lease_timeout_s=None, poll_s=0.01,
-                 respawn=True, monitor=None):
+                 respawn=True, monitor=None, telemetry=None):
         if transport not in ("proc", "inproc"):
             raise ValueError(f"unknown transport {transport!r} "
                              "(expected 'proc' or 'inproc')")
@@ -93,7 +94,8 @@ class WorkerPool:
                        "bucket": bucket,
                        "backend_mode": backend.get_mode()}
         self.service = QueueService(self.queue, fetch_item=self._fetch,
-                                    setup=self._setup, monitor=monitor)
+                                    setup=self._setup, monitor=monitor,
+                                    telemetry=telemetry)
         self._items = {}        # wid -> chunk bytes (the data plane)
         self._submit_t = {}     # wid -> submit time (oldest-age gauge)
         self._completed = {}    # wid -> BatchResult awaiting claim
@@ -176,11 +178,13 @@ class WorkerPool:
         for worker, wid, payload in self.service.pop_results():
             if not self.queue.complete([wid]):
                 continue            # a redelivery raced a straggler
-            self.service.note_done(worker)
+            det, f = unpack_result(payload)
+            self.service.note_done(worker, wid=wid,
+                                   survivors=int(f["n_kept"]),
+                                   bytes_out=f["cleaned"].nbytes)
             with self.queue.lock:
                 self._items.pop(wid, None)
                 self._submit_t.pop(wid, None)
-            det, f = unpack_result(payload)
             res = BatchResult(cleaned=f["cleaned"], det=det,
                               n_kept=f["n_kept"], wid=wid,
                               src_bytes=f["src_bytes"])
@@ -201,6 +205,9 @@ class WorkerPool:
                 self._handles[k] = self._spawn(k)
                 self._dead.discard(k)
                 self.respawns += 1
+                obs_metrics.counter(
+                    "pool_respawns_total",
+                    "dead proc workers replaced").inc()
         for k, t in list(self._threads.items()):
             if k not in self._dead and not t.is_alive() \
                     and not self.queue.finished:
@@ -275,12 +282,24 @@ class WorkerPool:
                      if h.poll() is None])
                 or len([t for t in self._threads.values() if t.is_alive()]))
         done, total = self.queue.progress()
-        return {"workers": live, "busy": busy,
-                "idle": max(0, live - busy),
-                "queue_depth": queued, "in_flight": leased,
-                "oldest_age_s": (None if oldest is None
-                                 else time.monotonic() - oldest),
-                "submitted": total, "completed": done}
+        out = {"workers": live, "busy": busy,
+               "idle": max(0, live - busy),
+               "queue_depth": queued, "in_flight": leased,
+               "oldest_age_s": (None if oldest is None
+                                else time.monotonic() - oldest),
+               "submitted": total, "completed": done}
+        reg = obs_metrics.get_registry()
+        if reg.enabled:
+            # mirror into the registry so metrics_text()/snapshot() carry
+            # the live pool view without a second collection path
+            reg.gauge("pool_workers", "live workers").set(live)
+            reg.gauge("pool_busy", "workers holding leases").set(busy)
+            reg.gauge("pool_queue_depth", "unleased work ids").set(queued)
+            reg.gauge("pool_in_flight", "leased, uncompleted ids").set(leased)
+            reg.gauge("pool_oldest_age_s",
+                      "age of the oldest unserved request").set(
+                          out["oldest_age_s"] or 0.0)
+        return out
 
     def kill_worker(self, shard):
         """SIGKILL a proc worker (chaos testing — the pool must redeliver

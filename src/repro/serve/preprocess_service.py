@@ -52,6 +52,8 @@ import numpy as np
 from repro.core import scheduler as SCHED
 from repro.core.plans import Preprocessor
 from repro.distributed.sharding import NULL_RULES
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
 
 
 class PreprocessService:
@@ -74,6 +76,8 @@ class PreprocessService:
         rid = self._next_id
         self._next_id += 1
         self._queue.append((rid, np.asarray(long_chunk, np.float32)))
+        obs_metrics.counter("serve_requests_total",
+                            "requests admitted to PreprocessService").inc()
         return rid
 
     def pump(self):
@@ -125,7 +129,8 @@ class PreprocessService:
         (warm hits never touch a worker), misses go to the pool's
         persistent workers, and fresh results are written back."""
         if self.pool is None:
-            return self.pre(batch)
+            with obs_tracing.span("serve_pump", rows=int(batch.shape[0])):
+                return self.pre(batch)
         plan = self.pre.plan
         store = getattr(plan, "store", None)
         key = None
@@ -133,9 +138,13 @@ class PreprocessService:
             key = plan._key(batch)
             hit = store.get(key, src_bytes=batch.nbytes)
             if hit is not None:
+                obs_metrics.counter(
+                    "serve_store_hits_total",
+                    "pumped batches answered from the chunk store").inc()
                 return plan._result(*hit, wid=None, extra=None)
-        wid = self.pool.submit(batch)
-        res = self.pool.wait([wid])[wid]
+        with obs_tracing.span("serve_pool_pump", rows=int(batch.shape[0])):
+            wid = self.pool.submit(batch)
+            res = self.pool.wait([wid])[wid]
         if store is not None:
             store.put(key, *plan._entry(res))
         return res
@@ -160,3 +169,20 @@ class PreprocessService:
         if self.pool is not None:
             return self.pool.worker_stats
         return getattr(self.pre.plan, "worker_stats", None)
+
+    # -- observability ------------------------------------------------------
+    def metrics_snapshot(self):
+        """JSON-safe dump of the process-wide metrics registry (plan,
+        dist, pool, serving and store series alike — the service is just
+        a convenient place to scrape from). Refreshes the pool gauges
+        first so the snapshot carries the live serving view."""
+        if self.pool is not None:
+            self.pool.gauges()
+        return obs_metrics.snapshot()
+
+    def metrics_text(self):
+        """The same registry in Prometheus text exposition format — what
+        an HTTP /metrics endpoint would serve."""
+        if self.pool is not None:
+            self.pool.gauges()
+        return obs_metrics.render()

@@ -31,9 +31,10 @@ import os
 import shutil
 import tempfile
 import zlib
-from dataclasses import dataclass, field
 
 import numpy as np
+
+from repro.obs import metrics as obs_metrics
 
 
 def content_key(chunks, graph_fingerprint, backend_mode) -> str:
@@ -55,18 +56,40 @@ def content_key(chunks, graph_fingerprint, backend_mode) -> str:
     return h.hexdigest()
 
 
-@dataclass
+_STORE_FIELDS = (
+    "hits", "misses", "writes",
+    "dup_writes",       # put() of a key that already existed
+    "corrupt",          # entries evicted on crc mismatch
+    "bytes_saved",      # source bytes whose preprocessing a hit skipped
+    "bytes_written",    # bytes of result payload persisted
+    "gc_evicted",       # entries evicted by gc() retention sweeps
+    "gc_bytes_freed",   # payload bytes those sweeps reclaimed
+)
+
+
 class StoreStats:
-    """Hit/miss/volume accounting for one ChunkStore handle."""
-    hits: int = 0
-    misses: int = 0
-    writes: int = 0
-    dup_writes: int = 0     # put() of a key that already existed
-    corrupt: int = 0        # entries evicted on crc mismatch
-    bytes_saved: int = 0    # source bytes whose preprocessing a hit skipped
-    bytes_written: int = 0  # bytes of result payload persisted
-    gc_evicted: int = 0     # entries evicted by gc() retention sweeps
-    gc_bytes_freed: int = 0  # payload bytes those sweeps reclaimed
+    """Hit/miss/volume accounting for one ChunkStore handle.
+
+    The plain integer attributes stay the source of truth (and the only
+    surface callers touch), but every increment also mirrors its delta
+    into the process metrics registry as
+    `store_<field>_total{store=<label>}` — so a ChunkStore shows up in
+    `repro.obs` snapshots and Prometheus text without a scrape hook."""
+
+    def __init__(self, label="chunks"):
+        object.__setattr__(self, "label", str(label))
+        for name in _STORE_FIELDS:
+            object.__setattr__(self, name, 0)
+
+    def __setattr__(self, name, value):
+        if name in _STORE_FIELDS:
+            delta = value - getattr(self, name, 0)
+            if delta > 0:
+                obs_metrics.counter(
+                    "store_" + name + "_total",
+                    "ChunkStore ledger (mirrored from StoreStats)",
+                    ("store",)).labels(store=self.label).inc(delta)
+        object.__setattr__(self, name, value)
 
     @property
     def hit_rate(self) -> float:
@@ -105,7 +128,9 @@ class ChunkStore:
         os.makedirs(self._objects, exist_ok=True)
         self.verify_crc = verify_crc
         self.evict_corrupt = evict_corrupt
-        self.stats = StoreStats()
+        self.stats = StoreStats(
+            label=os.path.basename(os.path.normpath(self.directory))
+            or "chunks")
 
     def _path(self, key):
         return os.path.join(self._objects, key)
