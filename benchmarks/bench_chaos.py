@@ -1,0 +1,188 @@
+"""Elastic-fleet economics: what membership costs, what speculation buys.
+
+Two experiments over REAL proc workers (the transport the paper's
+master/slave deployment maps to):
+
+  overhead   the same stream with the elastic machinery off (fixed fleet,
+             no straggler detector) vs on (membership registry active,
+             speculative re-lease armed). The contract is that elasticity
+             is control-plane only — a handful of registry dict writes
+             and an idle-path straggler probe — so the wall-clock delta
+             should be noise.
+
+  straggler  the paper's throughput-is-the-slowest-node problem (Stowell
+             et al., PAPERS.md): the worker granted the LAST chunk is
+             SIGSTOPped at grant for `stall_s`, turning it into a genuine
+             end-of-stream straggler. With speculation OFF the stream
+             waits out the stall; with speculation ON the idle survivor
+             receives a duplicate lease and finishes while the straggler
+             sleeps — the end-of-stream tail (gap between the last two
+             acceptance timestamps in the durable telemetry) collapses
+             from ~stall_s to the survivor's recompute time.
+
+Writes `results/BENCH_chaos.json`.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.configs import SERF_AUDIO as cfg
+from repro.core.plans import Preprocessor
+from repro.data.loader import audio_batch_maker, make_shard_pool
+from repro.obs import telemetry as obs_telemetry
+from benchmarks.util import table, save_json
+
+
+def _run_proc(pre, pool, on_grant=None, timeout_s=900.0):
+    """Run a proc-transport sharded plan to completion on a thread,
+    installing `on_grant` on the service as soon as the fleet handle is
+    published. Returns (wall_s, results)."""
+    plan = pre.plan
+    results, err = [], []
+
+    def consume():
+        try:
+            results.extend(plan.run(pool))
+        except BaseException as e:      # noqa: BLE001 — reraised below
+            err.append(e)
+
+    t0 = time.perf_counter()
+    t = threading.Thread(target=consume, daemon=True, name="bench-chaos")
+    t.start()
+    if on_grant is not None:
+        while plan.fleet is None and t.is_alive():
+            time.sleep(0.01)
+        if plan.fleet is not None:
+            plan.fleet.service.on_grant = on_grant
+    t.join(timeout_s)
+    wall = time.perf_counter() - t0
+    if t.is_alive():
+        raise RuntimeError("bench_chaos run hung")
+    if err:
+        raise err[0]
+    return wall, results
+
+
+def _tail_s(telem_dir):
+    """End-of-stream tail: the gap between the last two master-side
+    acceptance timestamps — how long the stream sat waiting on its final
+    chunk after the rest were done."""
+    recs = obs_telemetry.read_records(telem_dir)
+    ts = sorted(r["accept_ts"] for r in recs
+                if r.get("status") == "done" and r.get("accept_ts"))
+    return float(ts[-1] - ts[-2]) if len(ts) >= 2 else 0.0
+
+
+def _straggler_pass(make, n_batches, stall_s, speculate):
+    """One injected-straggler run; returns (wall, tail, plan)."""
+    pool = make_shard_pool(make, n_batches, 2, lease_timeout_s=600.0)
+    tdir = tempfile.mkdtemp(prefix="bench_chaos_")
+    telem = obs_telemetry.TelemetryWriter(tdir)
+    kwargs = dict(speculate=speculate)
+    if speculate:
+        # factor 0: any in-flight chunk is speculatable the moment a
+        # worker idles — the deterministic arm (organic p95 thresholds
+        # are compile-skewed on a 2-worker CPU run this small)
+        kwargs.update(straggler_factor=0.0, straggler_min_history=1)
+    pre = Preprocessor(cfg, plan="sharded", shards=2, pad_multiple=1,
+                       transport="proc", telemetry=telem, **kwargs)
+    stalled = []
+
+    def on_grant(worker, wid):
+        if wid == n_batches - 1 and not stalled:
+            stalled.append(worker)
+            fleet = pre.plan.fleet
+            fleet.stall(fleet.service.workers[worker].shard, stall_s)
+
+    try:
+        wall, results = _run_proc(pre, pool, on_grant=on_grant)
+        assert sorted(r.wid for r in results) == list(range(n_batches))
+        assert stalled, "the last chunk was never granted"
+        telem.close()
+        return wall, _tail_s(tdir), pre.plan
+    finally:
+        telem.close()
+        shutil.rmtree(tdir, ignore_errors=True)
+
+
+def run(n_batches=6, stall_s=15.0, seed=17):
+    make = audio_batch_maker(seed=seed, batch_long_chunks=1)
+
+    # -- experiment 1: elasticity machinery off vs on, no chaos ------------
+    walls = {}
+    for mode, kwargs in (("off", dict(speculate=False, elastic=False)),
+                         ("on", dict(speculate=True, elastic=True))):
+        pool = make_shard_pool(make, n_batches, 2, lease_timeout_s=600.0)
+        pre = Preprocessor(cfg, plan="sharded", shards=2, pad_multiple=1,
+                           transport="proc", **kwargs)
+        walls[mode], results = _run_proc(pre, pool)
+        assert sorted(r.wid for r in results) == list(range(n_batches))
+    overhead = walls["on"] / walls["off"] - 1.0
+
+    # -- experiment 2: injected end-of-stream straggler, spec off vs on ----
+    wall_off, tail_off, _ = _straggler_pass(make, n_batches, stall_s,
+                                            speculate=False)
+    wall_on, tail_on, plan = _straggler_pass(make, n_batches, stall_s,
+                                             speculate=True)
+
+    rows = [["elastic off", walls["off"], "-", "-"],
+            ["elastic on", walls["on"], f"{overhead:+.2%}", "-"],
+            ["straggler, spec off", wall_off, "-", tail_off],
+            ["straggler, spec on", wall_on, "-", tail_on]]
+    table(rows, ["mode", "wall s", "overhead", "tail s"],
+          title=f"Elastic fleet ({n_batches} batches, 2 proc workers, "
+                f"{stall_s:.0f}s injected stall)")
+
+    findings = {
+        "elasticity_overhead_pct": overhead,
+        "stall_s": stall_s,
+        "tail_off_s": tail_off,
+        "tail_on_s": tail_on,
+        "tail_cut_s": tail_off - tail_on,
+        "wall_cut_s": wall_off - wall_on,
+        "speculations": plan.speculations,
+        "speculations_lost": plan.speculations_lost,
+        "speculation_cuts_tail": bool(tail_on < tail_off),
+    }
+    out = {
+        "elasticity_overhead": {"off_wall_s": walls["off"],
+                                "on_wall_s": walls["on"],
+                                "overhead_pct": overhead},
+        "straggler_speculation": {
+            "stall_s": stall_s,
+            "off": {"wall_s": wall_off, "tail_s": tail_off},
+            "on": {"wall_s": wall_on, "tail_s": tail_on,
+                   "speculations": plan.speculations,
+                   "speculations_lost": plan.speculations_lost},
+        },
+        "findings": findings,
+    }
+    path = save_json("BENCH_chaos", out)
+    print(f"\nspeculative re-lease cut the end-of-stream tail from "
+          f"{tail_off:.1f}s to {tail_on:.1f}s "
+          f"({findings['tail_cut_s']:+.1f}s; wall "
+          f"{findings['wall_cut_s']:+.1f}s) under a {stall_s:.0f}s "
+          f"injected stall; elastic machinery overhead {overhead:+.2%}")
+    print(f"record -> {path}")
+    assert findings["speculation_cuts_tail"], \
+        "speculation failed to cut the injected-straggler tail"
+    return findings
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batches", type=int, default=6)
+    ap.add_argument("--stall-s", type=float, default=15.0)
+    ap.add_argument("--seed", type=int, default=17)
+    args = ap.parse_args()
+    run(n_batches=args.batches, stall_s=args.stall_s, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,7 @@ import time
 import traceback
 
 
-def smoke():
+def smoke(chaos_seed=None):
     """One tiny batch stream through EVERY registered execution plan:
     survivor sets must match bit-for-bit and cleaned audio to rtol=1e-4, so
     executor regressions fail fast (scripts/verify.sh runs this). Then the
@@ -36,10 +36,18 @@ def smoke():
     redelivered. Finally the FUSED-TAIL gate: two_phase with the fused
     single-pass survivor tail vs the staged per-stage tail, bit-identical
     masks + cleaned audio in ref AND interpret backends, pad rows zero.
-    Finally the OBSERVABILITY gate: the driver over 2 real proc workers
+    Then the OBSERVABILITY gate: the driver over 2 real proc workers
     with --trace + --telemetry must yield a schema-valid Chrome trace with
     worker events parented under the master's run span and exactly one
-    durable telemetry record per chunk."""
+    durable telemetry record per chunk. Finally the CHAOS gate: seeded
+    randomized schedules (SIGKILL, mid-run join, graceful drain, SIGSTOP
+    stall — at least one of each) fired against 2+ REAL proc workers
+    while the stream runs, every chunk exactly once and bit-identical to
+    two_phase, plus an injected-straggler scenario where the last chunk's
+    holder is SIGSTOPped: an idle survivor must win the speculative
+    duplicate lease and the losing incarnation must be attributed in the
+    durable telemetry under reason "speculated". Any failing schedule is
+    reproducible via --chaos-seed (the seed is printed in the failure)."""
     import numpy as np
     from repro.configs import SERF_AUDIO as cfg
     from repro.core.plans import PLANS, Preprocessor
@@ -108,7 +116,12 @@ def smoke():
     except Exception:
         failures.append("obs")
         traceback.print_exc()
-    n_gates = len(PLANS) + 7
+    try:
+        _chaos_smoke(np, cfg, Preprocessor, chaos_seed=chaos_seed)
+    except Exception:
+        failures.append("chaos")
+        traceback.print_exc()
+    n_gates = len(PLANS) + 8
     print(f"\nsmoke: {n_gates - len(failures)}/{n_gates} "
           f"gates OK" + (f"; FAILED: {failures}" if failures else ""))
     raise SystemExit(1 if failures else 0)
@@ -436,15 +449,175 @@ def _obs_smoke():
         shutil.rmtree(tmp, ignore_errors=True)
 
 
+def _chaos_smoke(np, cfg, Preprocessor, chaos_seed=None):
+    """Elastic-fleet chaos gate. N distinct seeded schedules — each mixing
+    at least one SIGKILL, one mid-run join, one graceful drain and one
+    SIGSTOP stall — fire against REAL proc workers while the stream runs:
+    every chunk must come out exactly once, masks AND cleaned audio
+    bit-identical to two_phase, every scheduled event must fire, and at
+    least one lease redelivery and one registered late joiner must be
+    observed across the schedules. Then the injected-straggler speculation
+    scenario: the holder of the LAST chunk is SIGSTOPped at grant; an idle
+    survivor must win a speculative duplicate lease, with the losing
+    incarnation attributed in durable telemetry under reason
+    "speculated". Every failure message carries the seed that reproduces
+    the schedule (`--chaos-seed`)."""
+    from repro.data.loader import audio_batch_maker, make_shard_pool
+    from repro.ft.chaos import ACTIONS, ChaosRunner, make_schedule
+
+    t0 = time.time()
+    seeds = [int(chaos_seed)] if chaos_seed is not None else [11, 23, 37]
+    n_batches = 6
+    ref = Preprocessor(cfg, plan="two_phase", pad_multiple=1)
+    total_redeliveries = total_specs = 0
+    joined_names = []
+    for seed in seeds:
+        t1 = time.time()
+        make = audio_batch_maker(seed=seed, batch_long_chunks=2)
+        pool = make_shard_pool(make, n_batches, 2, lease_timeout_s=300.0)
+        pre = Preprocessor(cfg, plan="sharded", shards=2, pad_multiple=1,
+                           transport="proc", elastic=True)
+        schedule = make_schedule(seed, n_batches)
+        runner = ChaosRunner(pre.plan, pool, schedule, seed=seed)
+        tag = (f"[chaos seed {seed}] reproduce with: PYTHONPATH=src "
+               f"python -m benchmarks.run --smoke --chaos-seed {seed}")
+        try:
+            results, fired = runner.run()
+            wids = sorted(r.wid for r in results)
+            assert wids == list(range(n_batches)), \
+                f"lost/duplicated chunks: emitted {wids}"
+            unfired = [e.action for e in schedule if not e.fired]
+            assert not unfired, f"events never fired: {unfired}"
+            by_action = {a: sum(1 for e in fired if e.action == a)
+                         for a in ACTIONS}
+            assert all(by_action[a] >= 1 for a in ACTIONS), \
+                f"schedule incomplete: {by_action}"
+            for r in sorted(results, key=lambda r: r.wid):
+                want = ref(make(r.wid)[0])
+                np.testing.assert_array_equal(np.asarray(r.det.keep),
+                                              np.asarray(want.det.keep))
+                np.testing.assert_array_equal(r.cleaned, want.cleaned)
+        except Exception as e:
+            raise AssertionError(f"{tag}: {e}") from e
+        names = {st.worker for st in pre.plan.worker_stats}
+        joined_names += [f"shard{e.target}" for e in fired
+                         if e.action == "join"
+                         and f"shard{e.target}" in names]
+        total_redeliveries += pre.plan.redeliveries
+        total_specs += pre.plan.speculations
+        print(f"  chaos seed {seed}: {len(wids)}/{n_batches} exactly once "
+              f"+ bit-identical under {by_action}, redeliveries="
+              f"{pre.plan.redeliveries} in {time.time() - t1:.1f}s")
+    assert total_redeliveries >= 1, \
+        "no schedule produced a lease redelivery"
+    assert joined_names, \
+        "no late joiner ever registered with the membership registry"
+    spec_worker, spec_plan = _chaos_speculation_smoke(np, cfg, Preprocessor,
+                                                      ref)
+    total_specs += spec_plan.speculations
+    print(f"plan chaos      OK: {len(seeds)} seeded schedules "
+          f"(seeds {seeds}) exactly once + bit-identical, "
+          f"redeliveries={total_redeliveries}, late joiners registered "
+          f"{sorted(set(joined_names))}, speculations={total_specs} "
+          f"({spec_worker} lost the duplicate-lease race, attributed "
+          f"in telemetry) in {time.time() - t0:.1f}s")
+
+
+def _chaos_speculation_smoke(np, cfg, Preprocessor, ref):
+    """Injected-straggler speculation scenario (the deterministic arm of
+    the chaos gate): factor-0 detector = every in-flight chunk counts as
+    a straggler once any history exists, so the moment the pending queue
+    empties, the idle worker receives a speculative duplicate of the
+    SIGSTOPped holder's chunk and wins the race."""
+    import shutil
+    import tempfile
+    import threading
+
+    from repro.data.loader import audio_batch_maker, make_shard_pool
+    from repro.obs.telemetry import (TelemetryWriter, read_records,
+                                     worker_ledger)
+
+    n_batches = 6
+    make = audio_batch_maker(seed=7, batch_long_chunks=1)
+    pool = make_shard_pool(make, n_batches, 2, lease_timeout_s=300.0)
+    tdir = tempfile.mkdtemp(prefix="smoke_chaos_spec_")
+    telem = TelemetryWriter(tdir)
+    pre = Preprocessor(cfg, plan="sharded", shards=2, pad_multiple=1,
+                       transport="proc", speculate=True,
+                       straggler_factor=0.0, straggler_min_history=1,
+                       telemetry=telem)
+    plan = pre.plan
+    results, err, stalled = [], [], []
+
+    def consume():
+        try:
+            results.extend(plan.run(pool))
+        except BaseException as e:      # noqa: BLE001 — reraised below
+            err.append(e)
+
+    def on_grant(worker, wid):
+        # the LAST chunk's holder becomes a genuine straggler: stopped
+        # long enough that the idle survivor computes the duplicate first
+        if wid == n_batches - 1 and not stalled:
+            stalled.append(worker)
+            plan.fleet.stall(plan.fleet.service.workers[worker].shard,
+                             20.0)
+
+    t = threading.Thread(target=consume, daemon=True,
+                         name="chaos-spec-consumer")
+    t.start()
+    try:
+        while plan.fleet is None and t.is_alive():
+            time.sleep(0.01)
+        if plan.fleet is not None:
+            plan.fleet.service.on_grant = on_grant
+        t.join(600.0)
+        assert not t.is_alive(), "speculation scenario hung"
+        if err:
+            raise err[0]
+        telem.close()
+        wids = sorted(r.wid for r in results)
+        assert wids == list(range(n_batches)), \
+            f"lost/duplicated chunks: emitted {wids}"
+        for r in results:
+            want = ref(make(r.wid)[0])
+            np.testing.assert_array_equal(np.asarray(r.det.keep),
+                                          np.asarray(want.det.keep))
+            np.testing.assert_array_equal(r.cleaned, want.cleaned)
+        assert stalled, "the last chunk was never granted?"
+        assert plan.speculations >= 1, \
+            "no speculative duplicate lease was granted"
+        assert plan.speculations_lost >= 1, \
+            "both incarnations of the speculated chunk vanished"
+        recs = read_records(tdir)
+        lost = [r for r in recs if r.get("status") == "redelivered"
+                and r.get("reason") == "speculated"]
+        assert lost, "losing incarnation not attributed in telemetry"
+        led = worker_ledger(recs)
+        losers = [w for w, e in led.items() if e["speculation_lost"]]
+        assert losers, "worker ledger shows no speculation_lost breakout"
+        done = sorted(r["wid"] for r in recs if r.get("status") == "done")
+        assert done == list(range(n_batches)), \
+            f"telemetry done records not exactly-once: {done}"
+        return losers[0], plan
+    finally:
+        telem.close()
+        shutil.rmtree(tdir, ignore_errors=True)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on 1 CPU core)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny batch through every execution plan, then exit")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="run the chaos gate with this single schedule "
+                         "seed (reproduce a failing schedule; default: "
+                         "the gate's own seed set)")
     args = ap.parse_args()
     if args.smoke:
-        smoke()
+        smoke(chaos_seed=args.chaos_seed)
     minutes = 16.0 if args.full else 2.0
     hours = 2.0
 
@@ -455,7 +628,7 @@ def main():
                             bench_early_exit, bench_cache,
                             bench_dispatch_depth, bench_queue_depth,
                             bench_serving, bench_fused_tail,
-                            bench_obs_overhead)
+                            bench_obs_overhead, bench_chaos)
     steps = [
         ("Table 1 / Fig 1: stage times",
          lambda: bench_stage_times.run(minutes=minutes)),
@@ -491,6 +664,8 @@ def main():
          lambda: bench_fused_tail.run(reps=2 if not args.full else 4)),
         ("Observability: off/metrics/full overhead",
          lambda: bench_obs_overhead.run(reps=2 if not args.full else 4)),
+        ("Elasticity: membership overhead + speculative tail cut",
+         lambda: bench_chaos.run()),
     ]
     failures = []
     for name, fn in steps:

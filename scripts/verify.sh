@@ -33,12 +33,38 @@
 #      carry dur, B/E balance LIFO per pid/tid) with worker-process
 #      events parented under the master's run span across the pickle
 #      boundary, and the durable telemetry JSONL must hold exactly ONE
-#      master-side 'done' record per chunk
+#      master-side 'done' record per chunk —
+#      PLUS the chaos gate — seeded randomized schedules (>= 1 SIGKILL,
+#      >= 1 mid-run join, >= 1 graceful drain, >= 1 SIGSTOP stall each)
+#      fired against 2+ REAL proc workers while the stream runs: every
+#      chunk exactly once, masks AND cleaned audio bit-identical to
+#      two_phase, redeliveries and registered late joiners observed;
+#      then the injected-straggler scenario — the last chunk's holder is
+#      SIGSTOPped at grant, an idle survivor must win the speculative
+#      duplicate lease, and the losing incarnation must be attributed in
+#      durable telemetry under reason "speculated". A failing schedule
+#      prints its seed; reproduce with
+#        bash scripts/verify.sh --chaos-seed <seed>
+#      (forwarded to `benchmarks.run --smoke`, which then runs ONLY that
+#      schedule plus the speculation scenario)
 #
-#   bash scripts/verify.sh [extra pytest args]
+#   bash scripts/verify.sh [--chaos-seed N] [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
-python -m pytest -x -q "$@"
-python -m benchmarks.run --smoke
+CHAOS_ARGS=()
+PYTEST_ARGS=()
+while [[ $# -gt 0 ]]; do
+  case "$1" in
+    --chaos-seed)
+      CHAOS_ARGS=(--chaos-seed "$2"); shift 2 ;;
+    --chaos-seed=*)
+      CHAOS_ARGS=(--chaos-seed "${1#*=}"); shift ;;
+    *)
+      PYTEST_ARGS+=("$1"); shift ;;
+  esac
+done
+
+python -m pytest -x -q "${PYTEST_ARGS[@]+"${PYTEST_ARGS[@]}"}"
+python -m benchmarks.run --smoke "${CHAOS_ARGS[@]+"${CHAOS_ARGS[@]}"}"

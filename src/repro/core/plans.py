@@ -139,6 +139,37 @@ are off. What each plan emits and where it lands:
     records master-side; redeliveries are attributed via
     `WorkQueue.on_redeliver`.
 
+Elasticity (`ShardedPlan` proc mode + `serve.WorkerPool`): the fleet a
+run starts with is not the fleet it must finish with.
+
+  * membership — `QueueService.hello/bye/drain` is a real registry:
+    per-worker state (active/draining/departed/dead) plus a membership
+    epoch that bumps on every transition (`dist_membership_epoch` /
+    `dist_workers{state}` gauges). A worker may `hello` into a run
+    already in progress and receives the SAME setup blob the original
+    fleet got; `ShardedPlan`'s proc master exposes this as `plan.fleet`
+    (a `FleetControl`: spawn/drain/kill/stall live workers mid-run), and
+    `WorkerPool` autoscales between `min_workers`/`max_workers` on
+    sustained queue backlog, scaling down by DRAINING idle workers — a
+    drained worker finishes its held leases, takes no more, and exits
+    through `bye`, so nothing is ever reaped from it.
+  * speculation — with `speculate=` armed, a `StragglerDetector` inside
+    the QueueService watches lease->complete latencies; when an idle
+    ACTIVE worker's lease comes back empty with work still in flight
+    (the end-of-stream shape), the slowest flagged item is duplicated to
+    it via `WorkQueue.speculate` WITHOUT reaping the original lease.
+    First completion wins; the loser is attributed in telemetry under
+    reason "speculated".
+  * when speculation is safe — exactly-once emission needs no new
+    machinery precisely because every plan already gates emission on
+    `WorkQueue.complete()` returning the id as newly retired: duplicate
+    pushes are discarded at that gate, and emission order (ascending
+    work id) is position-, not worker-, determined. Speculation is
+    therefore safe whenever the computation is a pure function of the
+    fetched bytes — true for every stage graph here. It would NOT be
+    safe for side-effecting work (per-item external writes) without an
+    idempotency layer at the effect site.
+
 All plans sit behind the `Preprocessor` facade, and all jitted phases live
 in one keyed LRU `CompileCache`. Keys are *value* fingerprints — config,
 stage list, `ShardingRules.fingerprint` (mesh shape + rule table + device
@@ -169,6 +200,7 @@ from repro.data.queue import WorkQueue
 from repro.dist.service import QueueService, pack_result, unpack_result
 from repro.dist.transport import ProcTransport
 from repro.distributed.sharding import NULL_RULES
+from repro.ft.failure import StragglerDetector
 from repro.kernels import backend
 from repro.obs import metrics as obs_metrics
 from repro.obs import tracing as obs_tracing
@@ -590,6 +622,67 @@ class StreamingPlan(AsyncPlan):
                          emit_buffer=emit_buffer, fuse_tail=fuse_tail)
 
 
+class FleetControl:
+    """Live handle on an elastic proc fleet, published as `plan.fleet`
+    while `ShardedPlan._run_proc` is running (and left in place afterwards
+    for post-run inspection of the service's counters).
+
+    This is the membership write-side the chaos harness and benches
+    drive: spawn a late joiner, drain a worker out gracefully, SIGKILL
+    one, or SIGSTOP-stall one. Everything routes through the same
+    transport/service the original fleet uses — a late joiner is just
+    `spawn_worker` + `hello` at a later time."""
+
+    def __init__(self, plan, service, transport, handles):
+        self.plan = plan
+        self.service = service
+        self.transport = transport
+        self.handles = handles          # shard -> WorkerHandle (live dict,
+                                        # shared with the emit loop)
+        self._next = max(handles, default=-1) + 1
+        self._lock = threading.Lock()
+
+    def live(self):
+        """shard -> WorkerHandle for workers whose process still runs."""
+        return {k: h for k, h in list(self.handles.items())
+                if h.poll() is None}
+
+    def spawn(self, shard=None):
+        """Spawn a late joiner (next free shard id unless given). The new
+        worker hellos into the in-progress run, gets the same setup blob,
+        and starts leasing from the shared queue."""
+        with self._lock:
+            if shard is None:
+                shard = self._next
+            self._next = max(self._next, int(shard) + 1)
+        h = self.transport.spawn_worker(shard,
+                                        lease_items=self.plan.lease_items,
+                                        poll_s=self.plan.worker_poll_s)
+        self.handles[int(shard)] = h
+        if self.plan.injector is not None:
+            self.plan.injector.attach(int(shard), h.pid)
+        return h
+
+    def drain(self, shard):
+        """Ask one worker to leave gracefully (finish held leases, take
+        no more, exit through bye)."""
+        return self.service.drain(self.handles[int(shard)].worker)
+
+    def kill(self, shard):
+        """SIGKILL one worker (chaos: dies holding whatever it holds)."""
+        self.handles[int(shard)].kill()
+
+    def stall(self, shard, seconds=None):
+        """SIGSTOP one worker, SIGCONT after `seconds` (chaos: a genuine
+        straggler — lease clock ticks, no heartbeats)."""
+        self.handles[int(shard)].stall(seconds)
+
+    def resume_all(self):
+        """SIGCONT everything still alive (chaos teardown safety)."""
+        for h in list(self.handles.values()):
+            h.resume()
+
+
 class ShardedPlan(TwoPhasePlan):
     """Fault-tolerant multi-shard execution over a shared leased WorkQueue,
     served by this plan (the MASTER) to its workers over a pluggable
@@ -635,7 +728,8 @@ class ShardedPlan(TwoPhasePlan):
                  lease_items=1, injector=None, monitor=None,
                  transport="inproc", worker_poll_s=0.05,
                  stall_timeout_s=300.0, lease_timeout_s=None,
-                 telemetry=None):
+                 telemetry=None, speculate=None, straggler_factor=2.0,
+                 straggler_min_history=4, elastic=False):
         self.shards = max(1, int(shards))
         if isinstance(rules, (list, tuple)):
             if len(rules) != self.shards:
@@ -663,9 +757,25 @@ class ShardedPlan(TwoPhasePlan):
         # QueueService both transports build, which writes durable
         # per-chunk records master-side at lease/fetch/push/acceptance
         self.telemetry = telemetry
+        # speculative re-lease of stragglers (see the module docstring's
+        # elasticity section). None = on for proc workers (where a slow
+        # process is a real tail-latency event), off for the simulated
+        # loop (where "slow" is not observable and duplicate computes
+        # only burn the one host).
+        self.speculate = speculate
+        self.straggler_factor = float(straggler_factor)
+        self.straggler_min_history = int(straggler_min_history)
+        # elastic=True relaxes the proc master's every-worker-exited
+        # fast-fail: with a chaos/autoscale driver on plan.fleet, an
+        # empty fleet is a moment, not a verdict — late joiners may be a
+        # spawn away (the stall timeout stays as the real backstop)
+        self.elastic = bool(elastic)
+        self.fleet = None               # FleetControl while _run_proc lives
         self._transport_kind()          # validate early, not mid-stream
         self.rebalancer = SCHED.Rebalancer(self.shards, pad_multiple)
         self.redeliveries = 0           # mirrored off the queue after run()
+        self.speculations = 0           # mirrored off the queue after run()
+        self.speculations_lost = 0      # mirrored off the queue after run()
         self.last_assignment = None     # last round's ShardAssignment
         self.worker_stats = None        # per-worker report of the last run
         self._release = None            # stream-item drop hook (see run())
@@ -790,10 +900,22 @@ class ShardedPlan(TwoPhasePlan):
         else:
             yield from self._run_sim(pool, queue)
 
+    def _make_straggler(self, kind):
+        """The speculation arm: a StragglerDetector for the QueueService,
+        or None. Default (speculate=None) arms it only under proc
+        transport — see __init__."""
+        on = (kind == "proc") if self.speculate is None \
+            else bool(self.speculate)
+        if not on:
+            return None
+        return StragglerDetector(factor=self.straggler_factor,
+                                 min_history=self.straggler_min_history)
+
     # -- in-proc master: the historical simulated round loop ----------------
     def _run_sim(self, pool, queue):
         service = QueueService(queue, monitor=self.monitor,
-                               telemetry=self.telemetry)
+                               telemetry=self.telemetry,
+                               straggler=self._make_straggler("inproc"))
         # every queue mutation flows through the service (pure delegation
         # under the queue's own lock, so behavior is bit-for-bit the old
         # direct path) and the per-worker ledger accrues as in proc mode
@@ -849,6 +971,8 @@ class ShardedPlan(TwoPhasePlan):
             for ld in pool:
                 ld.queue = queue
         self.redeliveries = queue.redeliveries
+        self.speculations = queue.speculations
+        self.speculations_lost = queue.speculations_lost
         self.worker_stats = service.worker_report()
 
     # -- proc master: real worker processes over the transport --------------
@@ -889,7 +1013,8 @@ class ShardedPlan(TwoPhasePlan):
         service = QueueService(queue, fetch_item=fetch,
                                setup=self._proc_setup(),
                                monitor=self.monitor,
-                               telemetry=self.telemetry)
+                               telemetry=self.telemetry,
+                               straggler=self._make_straggler("proc"))
         tp = self.transport if not isinstance(self.transport, str) \
             else ProcTransport()
         handles = {}
@@ -906,27 +1031,32 @@ class ShardedPlan(TwoPhasePlan):
                  if i not in set(snap["done"])]
         try:
             tp.serve(service)
+            # the fleet handle is published BEFORE the initial spawns so
+            # a chaos/autoscale driver watching plan.fleet sees the same
+            # membership the emit loop does; initial workers and late
+            # joiners go through the identical spawn path
+            self.fleet = FleetControl(self, service, tp, handles)
             for k in range(self.shards):
-                h = tp.spawn_worker(k, lease_items=self.lease_items,
-                                    poll_s=self.worker_poll_s)
-                handles[k] = h
-                if self.injector is not None:
-                    self.injector.attach(k, h.pid)
+                self.fleet.spawn(k)
             yield from self._proc_emit_loop(service, queue, handles,
                                             extras, order)
             # the queue is drained: give workers a moment to observe
             # `finished` and sign off (bye carries their idle/busy split)
             deadline = time.monotonic() + 5.0
-            for h in handles.values():
+            for h in list(handles.values()):
                 try:
                     h.proc.wait(max(0.0, deadline - time.monotonic()))
                 except Exception:
                     pass
         finally:
-            for h in handles.values():
+            if self.fleet is not None:
+                self.fleet.resume_all()   # never TERM a SIGSTOPped worker
+            for h in list(handles.values()):
                 h.shutdown()
             tp.close()
         self.redeliveries = queue.redeliveries
+        self.speculations = queue.speculations
+        self.speculations_lost = queue.speculations_lost
         self.worker_stats = service.worker_report()
 
     def _proc_emit_loop(self, service, queue, handles, extras, order):
@@ -944,7 +1074,9 @@ class ShardedPlan(TwoPhasePlan):
                 last_progress = time.monotonic()
                 self._note_assignment(service, drained)
             for worker, wid, payload in drained:
-                if not queue.complete([wid]):
+                # the winner's name rides into complete() so a lost
+                # speculation race attributes the OTHER incarnation
+                if not queue.complete([wid], worker=worker):
                     continue        # redelivery raced a straggler
                 det, f = unpack_result(payload)
                 # accepted == counted; acceptance is ALSO the durable
@@ -976,16 +1108,28 @@ class ShardedPlan(TwoPhasePlan):
                 yield res
             if emit_i >= len(order) or progressed:
                 continue
-            # no progress this tick: look for dead workers to reclaim
-            for k, h in handles.items():
-                if k not in reclaimed and h.poll() is not None \
-                        and not queue.finished:
-                    reclaimed.add(k)
-                    queue.fail_worker(h.worker)
+            # no progress this tick: look for dead workers to reclaim.
+            # handles is a LIVE dict (late joiners appear mid-iteration
+            # via plan.fleet.spawn) — snapshot it. A worker that exited
+            # in state draining/departed left gracefully holding nothing:
+            # nothing to reclaim, and it must not be marked dead.
+            for k, h in list(handles.items()):
+                if k in reclaimed or h.poll() is None or queue.finished:
+                    continue
+                reclaimed.add(k)
+                st = service.workers.get(h.worker)
+                if st is not None and st.state in ("draining", "departed"):
+                    continue
+                service.fail_worker(h.worker)
             if self.monitor is not None:
                 for w in sorted(set(self.monitor.dead())):
-                    queue.fail_worker(w)
-            if all(h.poll() is not None for h in handles.values()) \
+                    service.fail_worker(w)
+                    # reclaimed once is reclaimed: drop the dead worker
+                    # from liveness tracking so this loop does not re-fail
+                    # it every idle tick
+                    self.monitor.forget(w)
+            if not self.elastic \
+                    and all(h.poll() is not None for h in handles.values()) \
                     and not queue.finished:
                 raise RuntimeError(
                     "sharded plan stalled: every worker process exited "

@@ -11,6 +11,16 @@ return work to the queue automatically. The queue state is tiny and is
 checkpointed with the training state (ckpt meta), so a restart resumes the
 exact stream — no loss, no duplication beyond at-least-once redelivery.
 
+Straggler mitigation rides the same machinery: `speculate()` grants a
+SECOND, duplicate lease on an in-flight work id to an idle worker without
+reaping the original. Whichever incarnation completes first wins —
+`complete()` already gates exactly-once emission, so the loser's push is
+simply discarded, and the losing holder is attributed through
+`on_redeliver(wid, worker, "speculated")`. If the primary lease expires or
+its holder dies while a live speculative copy exists, the copy is PROMOTED
+to primary instead of re-queueing the id (the backup is already computing
+it — a third computation would only add load).
+
 Every mutating entry point takes `self.lock` (an RLock), because the queue
 is now served to REAL worker processes by `repro.dist`: each transport
 connection gets its own handler thread on the master, so lease/complete/
@@ -57,17 +67,30 @@ class WorkQueue:
         self.lock = threading.RLock()
         self._pending = list(range(n_items - 1, -1, -1))   # stack, pop() = 0..
         self._leases: dict[int, Lease] = {}
+        # speculative duplicate leases, wid -> Lease: at most ONE backup
+        # copy per in-flight id, held by a different worker than the
+        # primary. First completion wins; see speculate().
+        self._spec: dict[int, Lease] = {}
         self._done = set()
         self.redeliveries = 0
+        self.speculations = 0           # speculative leases ever granted
+        self.speculations_lost = 0      # incarnations that lost the race
         # per-worker attribution of lost leases (expiry or fail_worker):
         # who HELD the lease that had to be redelivered — the launch
         # driver's per-worker summary reads this.
         self.redelivered_from = collections.Counter()
         # Optional hook fired (under the queue lock) whenever a lease is
         # reclaimed: on_redeliver(wid, worker, reason) with reason
-        # "expired" (deadline passed) or "failed" (fail_worker).
-        # repro.obs wires this to durable telemetry + redelivery counters.
+        # "expired" (deadline passed), "failed" (fail_worker), or
+        # "speculated" (this incarnation lost a first-completion-wins race
+        # against its duplicate). repro.obs wires this to durable
+        # telemetry + redelivery counters.
         self.on_redeliver = None
+        # Optional hook fired (under the queue lock) with the list of
+        # NEWLY retired ids whenever complete() makes progress — the
+        # QueueService feeds its StragglerDetector from here so every
+        # completion path (proc emit loop, sim rounds, pool pump) counts.
+        self.on_complete = None
 
     # -- worker API ---------------------------------------------------------
     def lease(self, worker, max_items=1):
@@ -89,20 +112,66 @@ class WorkQueue:
                 out.append(wid)
             return out
 
-    def complete(self, work_ids):
+    def complete(self, work_ids, worker=None):
         """Retire work ids. Returns the ids that were NEWLY retired: a late
         completion of already-done work (the at-least-once overlap) comes
         back empty, so callers can gate result emission on it and keep
-        exactly-once output on top of at-least-once delivery."""
+        exactly-once output on top of at-least-once delivery.
+
+        `worker` (optional) names who produced the winning result. It only
+        matters for ids carrying a speculative duplicate lease: the OTHER
+        incarnation lost the first-completion-wins race and is attributed
+        via `on_redeliver(wid, loser, "speculated")`. Without a winner
+        name the primary is presumed to have won (the historical path —
+        only the emit loops that speculate pass it)."""
         with self.lock:
             newly = []
             for wid in work_ids:
                 if wid in self._done:
                     continue
-                self._leases.pop(wid, None)
+                primary = self._leases.pop(wid, None)
+                spec = self._spec.pop(wid, None)
                 self._done.add(wid)
                 newly.append(wid)
+                if spec is None:
+                    continue
+                if worker is None:
+                    losers = [spec]
+                else:
+                    losers = [l for l in (primary, spec)
+                              if l is not None and l.worker != worker]
+                for l in losers:
+                    self.speculations_lost += 1
+                    if self.on_redeliver is not None:
+                        self.on_redeliver(wid, l.worker, "speculated")
+            if newly and self.on_complete is not None:
+                self.on_complete(newly)
             return newly
+
+    def speculate(self, worker, wid) -> bool:
+        """Grant `worker` a SPECULATIVE duplicate lease on the in-flight
+        id `wid` WITHOUT reaping the primary lease (the backup-task rule:
+        near end-of-stream an idle worker re-runs the slowest in-flight
+        item). Refused — returns False — when the id is not currently
+        leased, already done, already has a backup, or `worker` is the
+        primary holder itself. Exactly-once emission needs no new
+        machinery: both incarnations push, `complete()` retires the id
+        once, and the loser is attributed there."""
+        with self.lock:
+            self._reap_expired()
+            lease = self._leases.get(wid)
+            if (lease is None or wid in self._done or wid in self._spec
+                    or lease.worker == worker):
+                return False
+            self._spec[wid] = Lease(wid, worker,
+                                    self.clock() + self.lease_timeout_s)
+            self.speculations += 1
+            return True
+
+    def speculated(self):
+        """Work ids currently carrying a speculative duplicate lease."""
+        with self.lock:
+            return sorted(self._spec)
 
     def heartbeat_extend(self, worker):
         with self.lock:
@@ -110,12 +179,20 @@ class WorkQueue:
             for lease in self._leases.values():
                 if lease.worker == worker:
                     lease.deadline = now + self.lease_timeout_s
+            for lease in self._spec.values():
+                if lease.worker == worker:
+                    lease.deadline = now + self.lease_timeout_s
 
     def leases_held(self, worker):
-        """Work ids currently leased by `worker` (progress reporting)."""
+        """Work ids currently leased by `worker`, speculative duplicates
+        included (progress/busy reporting — a worker re-running a
+        straggler's item is busy)."""
         with self.lock:
-            return sorted(wid for wid, l in self._leases.items()
-                          if l.worker == worker)
+            held = {wid for wid, l in self._leases.items()
+                    if l.worker == worker}
+            held |= {wid for wid, l in self._spec.items()
+                     if l.worker == worker}
+            return sorted(held)
 
     def is_done(self, wid) -> bool:
         """True once `wid` is retired — lets a data plane refuse to serve
@@ -127,12 +204,23 @@ class WorkQueue:
     # -- failure handling ---------------------------------------------------
     def _reap_expired(self):
         now = self.clock()
+        # expired speculative copies just evaporate: the primary still
+        # owns the id, nothing returns to pending, no redelivery counted
+        for wid in [w for w, l in self._spec.items() if l.deadline < now]:
+            del self._spec[wid]
         expired = [wid for wid, l in self._leases.items() if l.deadline < now]
         for wid in expired:
             worker = self._leases[wid].worker
             self.redelivered_from[worker] += 1
             del self._leases[wid]
-            self._pending.append(wid)
+            spec = self._spec.pop(wid, None)
+            if spec is not None:
+                # a live backup is already computing this id: promote it
+                # to primary instead of re-queueing (third copies add
+                # nothing but load)
+                self._leases[wid] = spec
+            else:
+                self._pending.append(wid)
             self.redeliveries += 1
             if self.on_redeliver is not None:
                 self.on_redeliver(wid, worker, "expired")
@@ -146,17 +234,32 @@ class WorkQueue:
                        default=None)
 
     def fail_worker(self, worker):
-        """Immediately return a dead worker's leases (heartbeat said dead)."""
+        """Immediately return a dead worker's leases (heartbeat said dead).
+        Ids whose speculative copy is still alive are promoted to that
+        copy instead of re-queued; the dead worker's own speculative
+        copies evaporate (their primaries are alive and computing)."""
         with self.lock:
+            for wid in [w for w, l in self._spec.items()
+                        if l.worker == worker]:
+                del self._spec[wid]
             back = [wid for wid, l in self._leases.items()
                     if l.worker == worker]
             for wid in back:
                 del self._leases[wid]
-                self._pending.append(wid)
+                spec = self._spec.pop(wid, None)
+                if spec is not None:
+                    self._leases[wid] = spec
+                else:
+                    self._pending.append(wid)
                 self.redeliveries += 1
                 if self.on_redeliver is not None:
                     self.on_redeliver(wid, worker, "failed")
-            self.redelivered_from[worker] += len(back)
+            if back:
+                # attribute only real losses: `Counter[w] += 0` would
+                # CREATE a phantom zero-count entry, polluting the launch
+                # driver's per-worker summary with workers that never
+                # lost a lease
+                self.redelivered_from[worker] += len(back)
             return back
 
     # -- checkpoint ---------------------------------------------------------
@@ -239,6 +342,7 @@ class StandingWorkQueue(WorkQueue):
             self.closed = True
             self._done = set(range(self.n_items))
             self._leases.clear()
+            self._spec.clear()
             self._pending.clear()
 
     def depth(self):

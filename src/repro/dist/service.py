@@ -33,11 +33,18 @@ from repro.obs import tracing as obs_tracing
 # the service object carries master-side state (result inbox, kill hooks)
 # that workers have no business reaching. `metrics` is read-only: a
 # snapshot of the master's registry (scrape endpoint over the transport).
+# `drain`/`draining` are the graceful-leave pair: a departing worker (or
+# the master's autoscaler) calls `drain`, the worker polls `draining` and
+# exits once its held leases are finished.
 RPC_METHODS = frozenset({
     "hello", "lease", "fetch", "fetch_many", "complete", "push_result",
     "heartbeat", "fail_worker", "state", "progress", "finished",
-    "next_deadline", "bye", "metrics",
+    "next_deadline", "bye", "metrics", "drain", "draining",
 })
+
+# Worker membership states (WorkerStats.state). Transitions bump the
+# service's membership epoch and are mirrored into the metrics registry.
+WORKER_STATES = ("active", "draining", "departed", "dead")
 
 
 @dataclass
@@ -50,6 +57,7 @@ class WorkerStats:
     worker: str
     shard: int = -1
     pid: int = None
+    state: str = "active"           # membership: active/draining/departed/dead
     lease_calls: int = 0            # queue round-trips (Table 7's axis)
     leased_total: int = 0           # work ids ever granted
     chunks_done: int = 0            # results ACCEPTED by the master (the
@@ -80,17 +88,35 @@ class QueueService:
       telemetry   optional repro.obs.telemetry.TelemetryWriter — per-chunk
                   records written MASTER-side at acceptance/redelivery so
                   they survive SIGKILLed workers
+      straggler   optional ft.failure.StragglerDetector — arms speculative
+                  re-lease: fed a start per granted id and a complete per
+                  retirement; when an ACTIVE worker's lease comes back
+                  empty with work still in flight (the end-of-stream
+                  shape), the slowest flagged item is duplicated to that
+                  idle worker via `WorkQueue.speculate`
+
+    Membership: `hello`/`bye`/`drain` and observed deaths drive a real
+    registry — per-worker `state` on WorkerStats plus a monotonically
+    increasing `epoch` that bumps on every join/leave/death, mirrored into
+    the metrics registry (`dist_membership_epoch`, `dist_workers{state}`).
+    Late joiners are first-class: a `hello` mid-run gets the SAME setup
+    blob the original fleet got and leases from the same queue.
     """
 
     def __init__(self, queue, fetch_item=None, setup=None, monitor=None,
-                 telemetry=None):
+                 telemetry=None, straggler=None):
         self.queue = queue
         self._fetch_item = fetch_item
         self._setup = dict(setup or {})
         self.monitor = monitor
         self.telemetry = telemetry
+        self.straggler = straggler
         self.workers: dict[str, WorkerStats] = {}
         self.lease_calls = 0
+        # membership epoch: a version counter over the worker set; every
+        # join, drain, departure, and observed death bumps it (gauged as
+        # dist_membership_epoch so dashboards see churn, not just counts)
+        self.epoch = 0
         self._results = collections.deque()
         # per-chunk event times (lease/fetch/push, content key), keyed by
         # wid; popped into a durable telemetry record at acceptance.
@@ -99,6 +125,10 @@ class QueueService:
         # its own lock for BOTH reclaim paths (expiry and fail_worker),
         # including direct fail_worker calls on the raw queue.
         queue.on_redeliver = self._on_redeliver
+        # Observe retirements at the source for the same reason: the
+        # detector's latency history must accrue no matter which emit
+        # loop (proc, sim, pool) completes the id.
+        queue.on_complete = self._on_complete
         # master-side hook, called INSIDE lease() once per granted work id
         # with (worker, wid): the CrashInjector's process-mode trigger — a
         # doomed worker is SIGKILLed while its fresh lease is registered
@@ -111,6 +141,36 @@ class QueueService:
         if st is None:
             st = self.workers[worker] = WorkerStats(worker)
         return st
+
+    # -- membership registry ------------------------------------------------
+    def _set_state(self, st: WorkerStats, state: str):
+        """Transition one worker's membership state; bumps the epoch and
+        re-publishes the membership gauges only on a real change."""
+        if st.state == state:
+            return
+        st.state = state
+        self.epoch += 1
+        self._publish_membership()
+
+    def _publish_membership(self):
+        reg = obs_metrics.get_registry()
+        if not reg.enabled:
+            return
+        by_state = collections.Counter(st.state for st in
+                                       self.workers.values())
+        g = reg.gauge("dist_workers", "registered workers by membership "
+                      "state", ("state",))
+        for s in WORKER_STATES:
+            g.labels(state=s).set(by_state.get(s, 0))
+        reg.gauge("dist_membership_epoch",
+                  "membership version: bumps on every join/drain/"
+                  "departure/death").set(self.epoch)
+
+    def active_workers(self):
+        """Names of workers currently in state 'active'."""
+        with self.queue.lock:
+            return sorted(w for w, st in self.workers.items()
+                          if st.state == "active")
 
     def note_beat(self, worker):
         """Record liveness WITHOUT extending lease deadlines (the simulated
@@ -148,12 +208,16 @@ class QueueService:
                     survivors=None if survivors is None else int(survivors),
                     bytes_in=tl.get("bytes_in"),
                     bytes_out=None if bytes_out is None else int(bytes_out),
-                    redelivered=int(tl.get("redelivered", 0)))
+                    redelivered=int(tl.get("redelivered", 0)),
+                    speculated=int(tl.get("speculated", 0)))
 
     def _on_redeliver(self, wid, worker, reason):
         """Queue-level reclaim hook (fires under the queue lock): count
         the redelivery and durably attribute the LOSING incarnation, so a
-        SIGKILLed worker's half-processed chunk shows both attempts."""
+        SIGKILLed worker's half-processed chunk shows both attempts. A
+        "speculated" reason is the first-completion-wins race resolving:
+        the id is ALREADY done, so the record attributes the loser but the
+        timeline is left for the winner's `done` record (written next)."""
         obs_metrics.counter(
             "dist_redeliveries_total", "leases reclaimed",
             ("worker", "reason")).labels(worker=worker, reason=reason).inc()
@@ -167,21 +231,39 @@ class QueueService:
             shard=st.shard if st else -1, pid=st.pid if st else None,
             content_key=tl.get("content_key"),
             lease_ts=tl.get("lease_ts"), fetch_ts=tl.get("fetch_ts"))
+        if reason == "speculated":
+            return
         # the next lease of this wid starts a fresh timeline but keeps the
-        # redelivery count, so the eventual "done" record carries it
-        self._timeline[wid] = {"redelivered": tl.get("redelivered", 0) + 1}
+        # redelivery and speculation counts, so the eventual "done" record
+        # carries them
+        self._timeline[wid] = {
+            "redelivered": tl.get("redelivered", 0) + 1,
+            "speculated": tl.get("speculated", 0)}
 
     # -- RPC surface --------------------------------------------------------
     def hello(self, worker, pid=None, shard=-1):
-        """Worker sign-in: registers identity, returns the setup blob.
+        """Worker sign-in: registers identity, returns the setup blob —
+        the SAME blob whether the worker is part of the original fleet or
+        joins a run already in progress (late joiners are how an elastic
+        fleet absorbs churn). A rejoin after departure/death is a fresh
+        incarnation: state returns to active and the epoch bumps.
         When the master has a live tracer, its propagation context (trace
         id + run-span parent id) rides along under "trace" — that is how
         worker-side spans get parented under the master's run span across
         the pickle boundary."""
         with self.queue.lock:
+            known = worker in self.workers
             st = self._w(worker)
             st.pid, st.shard = pid, int(shard)
             st.last_beat = self.queue.clock()
+            if not known or st.state != "active":
+                obs_metrics.counter(
+                    "dist_workers_joined_total",
+                    "workers that signed in (first hello or rejoin)",
+                    ("worker",)).labels(worker=worker).inc()
+                st.state = "active"
+                self.epoch += 1
+                self._publish_membership()
         prop = obs_tracing.get_tracer().propagate()
         if prop is None:
             return self._setup
@@ -191,15 +273,28 @@ class QueueService:
 
     def lease(self, worker, max_items=1):
         with self.queue.lock:
-            ids = self.queue.lease(worker, max_items)
             st = self._w(worker)
             st.lease_calls += 1
-            st.leased_total += len(ids)
             st.last_beat = self.queue.clock()
             self.lease_calls += 1
             obs_metrics.counter(
                 "dist_lease_calls_total", "queue round-trips",
                 ("worker",)).labels(worker=worker).inc()
+            if st.state != "active":
+                # draining (or formally departed) workers take no more
+                # work — an empty lease + the `draining` poll is their
+                # exit signal once held leases are finished
+                return []
+            ids = self.queue.lease(worker, max_items)
+            if not ids:
+                # end-of-stream shape: nothing pending but work still in
+                # flight, and THIS worker is idle — the backup-task rule
+                # duplicates the slowest flagged in-flight item onto it
+                ids = self._speculate_for(worker)
+            if self.straggler is not None:
+                for wid in ids:
+                    self.straggler.start(wid)
+            st.leased_total += len(ids)
             if ids:
                 obs_metrics.counter(
                     "dist_leased_ids_total", "work ids granted",
@@ -217,6 +312,33 @@ class QueueService:
             for wid in ids:
                 hook(worker, wid)
         return ids
+
+    def _speculate_for(self, worker):
+        """Try to grant `worker` a speculative duplicate lease on the
+        slowest straggling in-flight id. Returns [wid] or []. Called with
+        the queue lock held, from an empty normal lease."""
+        if self.straggler is None:
+            return []
+        for wid in self.straggler.stragglers():
+            if self.queue.speculate(worker, wid):
+                obs_metrics.counter(
+                    "dist_speculations_total",
+                    "speculative duplicate leases granted",
+                    ("worker",)).labels(worker=worker).inc()
+                # the eventual `done` record carries the speculation count
+                # no matter which incarnation wins
+                tl = self._timeline.setdefault(wid, {})
+                tl["speculated"] = tl.get("speculated", 0) + 1
+                return [wid]
+        return []
+
+    def _on_complete(self, wids):
+        """Queue-level retirement hook (fires under the queue lock):
+        closes the straggler detector's latency samples so its rolling
+        p95 reflects every completion path."""
+        if self.straggler is not None:
+            for wid in wids:
+                self.straggler.complete(wid)
 
     def fetch(self, wid):
         """Data plane: the chunk batch for one leased work id."""
@@ -243,8 +365,31 @@ class QueueService:
         self.heartbeat(worker)
         return items
 
-    def complete(self, work_ids):
-        return self.queue.complete(work_ids)
+    def complete(self, work_ids, worker=None):
+        return self.queue.complete(work_ids, worker=worker)
+
+    def drain(self, worker):
+        """Graceful leave: `worker` finishes the leases it holds and takes
+        no more. Caller may be the worker itself (a node being
+        decommissioned announces its own exit) or the master's autoscaler.
+        The worker's runtime polls `draining` and exits once its lease
+        comes back empty — the same exit shape as `finished`, scoped to
+        one worker."""
+        with self.queue.lock:
+            st = self._w(worker)
+            if st.state == "active":
+                obs_metrics.counter(
+                    "dist_workers_drained_total",
+                    "workers asked to leave gracefully",
+                    ("worker",)).labels(worker=worker).inc()
+                self._set_state(st, "draining")
+        return True
+
+    def draining(self, worker) -> bool:
+        """Worker-side poll: has this worker been asked to leave?"""
+        with self.queue.lock:
+            st = self.workers.get(worker)
+            return st is not None and st.state in ("draining", "departed")
 
     def push_result(self, worker, wid, payload):
         """Result plane: worker hands back one finished work id. The
@@ -276,7 +421,15 @@ class QueueService:
         return True
 
     def fail_worker(self, worker):
-        return self.queue.fail_worker(worker)
+        """Reclaim a dead worker's leases AND record the death in the
+        registry (state -> dead, epoch bump). Safe to call repeatedly —
+        the state transition and the gauges settle on first call."""
+        with self.queue.lock:
+            back = self.queue.fail_worker(worker)
+            st = self.workers.get(worker)
+            if st is not None and st.state not in ("departed", "dead"):
+                self._set_state(st, "dead")
+        return back
 
     def state(self):
         return self.queue.state()
@@ -302,6 +455,17 @@ class QueueService:
             for k in ("idle_s", "busy_s"):
                 if stats and k in stats:
                     setattr(st, k, float(stats[k]))
+            if st.state != "dead":
+                if st.state != "departed":
+                    obs_metrics.counter(
+                        "dist_workers_left_total",
+                        "workers that signed off gracefully",
+                        ("worker",)).labels(worker=worker).inc()
+                self._set_state(st, "departed")
+        # a departed worker stops heartbeating BY DESIGN — drop it from
+        # liveness tracking so it never surfaces in monitor.dead()
+        if self.monitor is not None:
+            self.monitor.forget(worker)
         if stats and stats.get("spans"):
             obs_tracing.get_tracer().add_events(stats["spans"])
         return True

@@ -131,6 +131,27 @@ class WorkerHandle:
         except ProcessLookupError:
             pass
 
+    def stall(self, seconds=None):
+        """SIGSTOP — freeze the worker mid-whatever (a genuine straggler:
+        no heartbeats, no pushes, the lease clock keeps ticking). With
+        `seconds` a timer SIGCONTs it back; without, call resume()
+        yourself. The chaos harness's stall injection."""
+        try:
+            os.kill(self.proc.pid, signal.SIGSTOP)
+        except ProcessLookupError:
+            return
+        if seconds is not None:
+            t = threading.Timer(float(seconds), self.resume)
+            t.daemon = True
+            t.start()
+
+    def resume(self):
+        """SIGCONT a stalled worker (no-op if it is gone or running)."""
+        try:
+            os.kill(self.proc.pid, signal.SIGCONT)
+        except ProcessLookupError:
+            pass
+
     def shutdown(self, timeout=5.0):
         """Best-effort teardown at end of run: TERM, wait, then KILL."""
         if self.proc.poll() is None:

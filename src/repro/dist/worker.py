@@ -85,7 +85,12 @@ def run_worker(master, shard, lease_items=1, poll_s=0.05, transport=None,
         w0 = time.time()
         ids = proxy.call("lease", worker, lease_items)
         if not ids:
-            if proxy.call("finished"):
+            # exit on the queue-global signal (finished) OR the per-worker
+            # one (drain): a draining worker's lease always comes back
+            # empty, and at the top of this loop everything previously
+            # leased is already pushed — held leases are finished, so
+            # leaving now is the graceful exit drain() promises
+            if proxy.call("finished") or proxy.call("draining", worker):
                 idle += time.perf_counter() - t0
                 break
             proxy.call("heartbeat", worker)

@@ -93,6 +93,14 @@ class HeartbeatMonitor:
     def beat(self, worker_id):
         self._last[worker_id] = self.clock()
 
+    def forget(self, worker_id):
+        """Drop a worker from liveness tracking entirely. A drained or
+        departed worker stops heartbeating BY DESIGN — without this it
+        would sit in `dead()` forever, and every elastic scale-down would
+        permanently trip the dead-worker fast path (fail_worker storms on
+        a worker that left cleanly holding nothing)."""
+        self._last.pop(worker_id, None)
+
     def alive(self):
         now = self.clock()
         return {w for w, t in self._last.items()
@@ -133,11 +141,16 @@ class StragglerDetector:
         return xs[min(len(xs) - 1, int(0.95 * len(xs)))]
 
     def stragglers(self):
+        """In-flight task ids past the backup-task limit, LONGEST-running
+        first — the speculation path re-leases from the front, so the
+        slowest item gets the first idle backup worker."""
         if len(self._latencies) < self.min_history:
             return []
         limit = self.factor * self.p95()
         now = self.clock()
-        return [t for t, t0 in self._inflight.items() if now - t0 > limit]
+        return sorted((t for t, t0 in self._inflight.items()
+                       if now - t0 > limit),
+                      key=lambda t: self._inflight[t])
 
 
 @dataclass

@@ -68,6 +68,10 @@ def main(argv=None):
                          "every shard in this process (deterministic, "
                          "zero spawn cost); 'proc' runs real worker "
                          "processes over the repro.dist socket transport")
+    ap.add_argument("--no-speculate", action="store_true",
+                    help="disable speculative re-lease of end-of-stream "
+                         "stragglers (sharded plan; on by default under "
+                         "the proc transport)")
     ap.add_argument("--lease-items", type=int, default=1,
                     help="work ids per queue round-trip (the paper's "
                          "Table 7 max_queue_size knob) for --plan sharded")
@@ -114,9 +118,15 @@ def main(argv=None):
         if args.lease_items != 1:
             ap.error("--lease-items batches the sharded plan's queue "
                      f"pulls; plan '{args.plan}' has no lease loop")
+        if args.no_speculate:
+            ap.error("--no-speculate disables the sharded plan's "
+                     f"speculative re-lease; plan '{args.plan}' has none")
     rules = pool_rules(args.shards, mesh) if sharded else ShardingRules(mesh)
     plan_kwargs = {"shards": args.shards, "transport": args.transport,
-                   "lease_items": args.lease_items} if sharded else {}
+                   "lease_items": args.lease_items,
+                   # None = the plan's default (on for proc workers)
+                   "speculate": False if args.no_speculate else None} \
+        if sharded else {}
     if args.plan == "async":
         plan_kwargs["depth"] = 4 if args.depth is None else args.depth
     elif args.depth is not None:
@@ -228,7 +238,9 @@ def main(argv=None):
         asg = exec_plan.last_assignment
         print(f"shards={args.shards} transport={args.transport} "
               f"lease_items={args.lease_items} "
-              f"redeliveries={exec_plan.redeliveries}")
+              f"redeliveries={exec_plan.redeliveries} "
+              f"speculations={exec_plan.speculations} "
+              f"(lost races {exec_plan.speculations_lost})")
         if asg is not None:
             st = asg.stats()
             print(f"last-round survivor re-shard: "
@@ -268,8 +280,10 @@ def worker_summary(worker_stats):
     """Per-worker progress lines for the end-of-run summary (sharded plan,
     both transports): queue round-trips vs work ids granted (the lease-
     batching economy), chunks finished, leases still held, redeliveries
-    charged to the worker (its lost leases), heartbeat age, and — proc
-    transport only — the worker-reported idle/busy split."""
+    charged to the worker (its lost leases), final membership state
+    (late joiners appear here; drained workers read "departed"),
+    heartbeat age, and — proc transport only — the worker-reported
+    idle/busy split."""
     lines = []
     for st in worker_stats or ():
         pid = f" pid={st.pid}" if st.pid else ""
@@ -278,7 +292,8 @@ def worker_summary(worker_stats):
         split = (f"  idle {st.idle_s:.1f}s / busy {st.busy_s:.1f}s"
                  if (st.idle_s or st.busy_s) else "")
         lines.append(
-            f"worker {st.worker}{pid}: {st.chunks_done} chunks done, "
+            f"worker {st.worker}{pid} [{st.state}]: "
+            f"{st.chunks_done} chunks done, "
             f"{st.leased_total} leased over {st.lease_calls} round-trips "
             f"({st.leases_held} still held), "
             f"{st.redeliveries} redelivered, last beat {beat}{split}")

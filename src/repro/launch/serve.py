@@ -78,6 +78,9 @@ def _audio_main(args):
     pool = WorkerPool(cfg, workers=args.pool_workers,
                       transport=args.pool_transport,
                       poll_s=args.poll_ms / 1e3,
+                      min_workers=args.pool_min_workers,
+                      max_workers=args.pool_max_workers,
+                      speculate=args.pool_speculate,
                       telemetry=telem).start()
     batcher = ContinuousBatcher(pool=pool, max_batch=args.max_batch,
                                 max_queue=args.max_queue,
@@ -121,8 +124,12 @@ def _audio_main(args):
         print(f"latency p50 {np.percentile(ok, 50) * 1e3:.0f} ms, "
               f"p99 {np.percentile(ok, 99) * 1e3:.0f} ms")
     print(f"batcher: {batcher.stats()}")
-    print("workers:", [(s.worker, s.pid, s.chunks_done)
+    print("workers:", [(s.worker, s.pid, s.state, s.chunks_done)
                        for s in pool.worker_stats])
+    if args.pool_max_workers is not None:
+        print(f"autoscale: {pool.scale_ups} scale-ups, "
+              f"{pool.scale_downs} scale-downs, membership epoch "
+              f"{pool.service.epoch}")
     if args.trace or args.telemetry:
         for line in obs_metrics.summary_lines():
             print("metrics:", line)
@@ -145,6 +152,17 @@ def main(argv=None):
                     help="requests total (LM) / per client (audio)")
     # audio serving mode
     ap.add_argument("--pool-workers", type=int, default=2)
+    ap.add_argument("--pool-min-workers", type=int, default=None,
+                    help="autoscale floor (default: --pool-workers, i.e. "
+                         "a fixed fleet)")
+    ap.add_argument("--pool-max-workers", type=int, default=None,
+                    help="autoscale ceiling: arms queue-depth-driven "
+                         "scale-up on sustained backlog and scale-down "
+                         "by draining idle workers (default: off)")
+    ap.add_argument("--pool-speculate", action="store_true",
+                    help="speculatively duplicate the slowest in-flight "
+                         "request onto an idle worker (first completion "
+                         "wins)")
     ap.add_argument("--pool-transport", default="proc",
                     choices=("proc", "inproc"))
     ap.add_argument("--clients", type=int, default=4)

@@ -148,8 +148,8 @@ def worker_ledger(records):
     def w(name):
         return out.setdefault(name, {
             "chunks_done": 0, "survivors": 0, "bytes_in": 0, "bytes_out": 0,
-            "redelivered_from": 0, "first_accept_ts": None,
-            "last_accept_ts": None})
+            "redelivered_from": 0, "speculation_lost": 0,
+            "first_accept_ts": None, "last_accept_ts": None})
 
     for r in records:
         if r.get("event") != "chunk":
@@ -168,4 +168,9 @@ def worker_ledger(records):
                 entry["last_accept_ts"] = ts
         elif r.get("status") == "redelivered":
             entry["redelivered_from"] += 1
+            # a "speculated" reason is not a lost LEASE but a lost RACE:
+            # this incarnation computed an id whose duplicate finished
+            # first — break it out so wasted-work dashboards see it
+            if r.get("reason") == "speculated":
+                entry["speculation_lost"] += 1
     return out

@@ -42,6 +42,7 @@ from repro.data.queue import StandingWorkQueue
 from repro.dist.service import QueueService, unpack_result
 from repro.dist.transport import InProcTransport, ProcTransport
 from repro.dist.worker import run_worker
+from repro.ft.failure import StragglerDetector
 from repro.kernels import backend
 from repro.obs import metrics as obs_metrics
 
@@ -69,12 +70,28 @@ class WorkerPool:
                        workers always have their leases reclaimed either
                        way; respawn=False lets chaos tests prove the
                        survivors absorb the load)
+      min_workers /    queue-depth-driven autoscaling band. max_workers
+      max_workers      arms it (None = fixed-size pool): sustained
+                       backlog (> autoscale_backlog_s with unleased work
+                       queued) spawns a late joiner up to max_workers;
+                       a sustained fully-idle pool (no queued or leased
+                       work for autoscale_idle_s) DRAINS one idle worker
+                       down to min_workers (defaults to `workers`) — the
+                       drained worker exits through bye, never reaped
+      speculate        arm speculative re-lease: an idle worker whose
+                       lease comes back empty may duplicate the slowest
+                       straggling in-flight item (first completion wins —
+                       exactly-once is already the completion gate's job)
     """
 
     def __init__(self, cfg, workers=2, transport="proc", stages=None,
                  source_channels=2, pad_multiple=1, bucket="pow2",
                  lease_items=1, lease_timeout_s=None, poll_s=0.01,
-                 respawn=True, monitor=None, telemetry=None):
+                 respawn=True, monitor=None, telemetry=None,
+                 min_workers=None, max_workers=None,
+                 autoscale_backlog_s=0.75, autoscale_idle_s=5.0,
+                 speculate=False, straggler_factor=2.0,
+                 straggler_min_history=4):
         if transport not in ("proc", "inproc"):
             raise ValueError(f"unknown transport {transport!r} "
                              "(expected 'proc' or 'inproc')")
@@ -84,6 +101,17 @@ class WorkerPool:
         self.lease_items = max(1, int(lease_items))
         self.poll_s = float(poll_s)
         self.respawn = bool(respawn)
+        self.min_workers = (self.workers if min_workers is None
+                            else max(1, int(min_workers)))
+        self.max_workers = None if max_workers is None \
+            else max(self.min_workers, int(max_workers))
+        self.autoscale_backlog_s = float(autoscale_backlog_s)
+        self.autoscale_idle_s = float(autoscale_idle_s)
+        self.scale_ups = 0
+        self.scale_downs = 0
+        self._backlog_since = None      # monotonic ts backlog first seen
+        self._idle_since = None         # monotonic ts full idle first seen
+        self.monitor = monitor
         if lease_timeout_s is None:
             lease_timeout_s = 300.0 if transport == "proc" else 60.0
         self.queue = StandingWorkQueue(lease_timeout_s=lease_timeout_s)
@@ -93,9 +121,13 @@ class WorkerPool:
                        "pad_multiple": int(pad_multiple),
                        "bucket": bucket,
                        "backend_mode": backend.get_mode()}
+        straggler = StragglerDetector(
+            factor=float(straggler_factor),
+            min_history=int(straggler_min_history)) if speculate else None
         self.service = QueueService(self.queue, fetch_item=self._fetch,
                                     setup=self._setup, monitor=monitor,
-                                    telemetry=telemetry)
+                                    telemetry=telemetry,
+                                    straggler=straggler)
         self._items = {}        # wid -> chunk bytes (the data plane)
         self._submit_t = {}     # wid -> submit time (oldest-age gauge)
         self._completed = {}    # wid -> BatchResult awaiting claim
@@ -103,6 +135,7 @@ class WorkerPool:
         self._handles = {}      # shard -> WorkerHandle (proc)
         self._threads = {}      # shard -> Thread (inproc)
         self._dead = set()      # shards whose leases were reclaimed
+        self._next_shard = self.workers   # late joiners get fresh ids
         self.respawns = 0
         self._tp = None
         self._started = False
@@ -176,7 +209,9 @@ class WorkerPool:
         `queue.complete` so at-least-once pushes stay exactly-once
         results; then reclaim dead workers."""
         for worker, wid, payload in self.service.pop_results():
-            if not self.queue.complete([wid]):
+            # winner's name rides into complete() so a lost speculation
+            # race attributes the other incarnation
+            if not self.queue.complete([wid], worker=worker):
                 continue            # a redelivery raced a straggler
             det, f = unpack_result(payload)
             self.service.note_done(worker, wid=wid,
@@ -191,16 +226,29 @@ class WorkerPool:
             with self._claim_lock:
                 self._completed[wid] = res
         self._reap_dead()
+        self._autoscale()
+
+    def _departed(self, worker) -> bool:
+        st = self.service.workers.get(worker)
+        return st is not None and st.state in ("draining", "departed")
 
     def _reap_dead(self):
         """Return a dead worker's leases immediately (the fail_worker
         fast path — lease expiry is the slow fallback) and, for proc
-        pools with respawn, replace the process."""
+        pools with respawn, replace the process. A worker that exited in
+        state draining/departed left GRACEFULLY (scale-down or its own
+        drain request): it holds nothing — forget it, never fail it."""
         for k, h in list(self._handles.items()):
-            if k in self._dead or h.poll() is None:
+            if h.poll() is None:
+                continue
+            if self._departed(h.worker):
+                del self._handles[k]
+                self._dead.discard(k)
+                continue
+            if k in self._dead:
                 continue
             self._dead.add(k)
-            self.queue.fail_worker(h.worker)
+            self.service.fail_worker(h.worker)
             if self.respawn and not self.queue.closed:
                 self._handles[k] = self._spawn(k)
                 self._dead.discard(k)
@@ -209,10 +257,96 @@ class WorkerPool:
                     "pool_respawns_total",
                     "dead proc workers replaced").inc()
         for k, t in list(self._threads.items()):
-            if k not in self._dead and not t.is_alive() \
-                    and not self.queue.finished:
+            if t.is_alive():
+                continue
+            if self._departed(f"shard{k}"):
+                del self._threads[k]
+                self._dead.discard(k)
+                continue
+            if k not in self._dead and not self.queue.finished:
                 self._dead.add(k)
-                self.queue.fail_worker(f"shard{k}")
+                self.service.fail_worker(f"shard{k}")
+
+    # -- elasticity ---------------------------------------------------------
+    def _live_active(self):
+        """Live workers not already on their way out: the autoscaler's
+        capacity measure."""
+        out = []
+        for k, h in self._handles.items():
+            if h.poll() is None and not self._departed(h.worker):
+                out.append(k)
+        for k, t in self._threads.items():
+            if t.is_alive() and not self._departed(f"shard{k}"):
+                out.append(k)
+        return sorted(out)
+
+    def add_worker(self):
+        """Spawn one late joiner on a fresh shard id (manual scale-up —
+        the autoscaler calls this too). Returns the new shard id."""
+        k = self._next_shard
+        self._next_shard += 1
+        if self.transport == "proc":
+            self._handles[k] = self._spawn(k)
+        else:
+            self._threads[k] = self._spawn_thread(k)
+        self.scale_ups += 1
+        obs_metrics.counter(
+            "pool_scale_ups_total",
+            "late joiners spawned on sustained backlog").inc()
+        return k
+
+    def drain_worker(self, shard=None):
+        """Ask one worker to leave gracefully: finish held leases, take
+        no more, exit through bye (manual scale-down — the autoscaler
+        calls this with an idle pick). Returns the drained shard id or
+        None if no drainable worker exists."""
+        with self.queue.lock:
+            if shard is None:
+                for k in reversed(self._live_active()):
+                    if not self.queue.leases_held(f"shard{k}"):
+                        shard = k
+                        break
+            if shard is None:
+                return None
+            self.service.drain(f"shard{shard}")
+        if self.monitor is not None:
+            self.monitor.forget(f"shard{shard}")
+        self.scale_downs += 1
+        obs_metrics.counter(
+            "pool_scale_downs_total",
+            "idle workers drained out on sustained idleness").inc()
+        return shard
+
+    def _autoscale(self):
+        """Queue-depth-driven elasticity, armed by max_workers: sustained
+        unleased backlog spawns a late joiner; a sustained fully-idle
+        pool drains one idle worker. One transition per sustain window —
+        the since-timestamps re-arm after every action, so the pool walks
+        toward the band edge instead of jumping."""
+        if self.max_workers is None or self._shut or self.queue.closed:
+            return
+        queued, leased = self.queue.depth()
+        now = time.monotonic()
+        live = len(self._live_active())
+        if queued > 0:
+            self._idle_since = None
+            if self._backlog_since is None:
+                self._backlog_since = now
+            elif (now - self._backlog_since >= self.autoscale_backlog_s
+                    and live < self.max_workers):
+                self.add_worker()
+                self._backlog_since = now
+        elif queued == 0 and leased == 0:
+            self._backlog_since = None
+            if self._idle_since is None:
+                self._idle_since = now
+            elif (now - self._idle_since >= self.autoscale_idle_s
+                    and live > self.min_workers):
+                self.drain_worker()
+                self._idle_since = now
+        else:
+            self._backlog_since = None
+            self._idle_since = None
 
     def poll(self):
         """Non-blocking: drain and return every newly completed
@@ -287,7 +421,10 @@ class WorkerPool:
                "queue_depth": queued, "in_flight": leased,
                "oldest_age_s": (None if oldest is None
                                 else time.monotonic() - oldest),
-               "submitted": total, "completed": done}
+               "submitted": total, "completed": done,
+               "epoch": self.service.epoch,
+               "scale_ups": self.scale_ups,
+               "scale_downs": self.scale_downs}
         reg = obs_metrics.get_registry()
         if reg.enabled:
             # mirror into the registry so metrics_text()/snapshot() carry
@@ -299,6 +436,9 @@ class WorkerPool:
             reg.gauge("pool_oldest_age_s",
                       "age of the oldest unserved request").set(
                           out["oldest_age_s"] or 0.0)
+            reg.gauge("pool_membership_epoch",
+                      "pool membership version (joins/drains/deaths)").set(
+                          self.service.epoch)
         return out
 
     def kill_worker(self, shard):

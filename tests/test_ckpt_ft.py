@@ -181,6 +181,41 @@ def test_heartbeat_monitor():
     assert hb.alive() == {"a"}
 
 
+def test_heartbeat_monitor_forget():
+    """A drained/departed worker stops heartbeating BY DESIGN: forget()
+    must drop it from tracking so it does not sit in dead() forever (and
+    trigger repeated fail_worker calls from every idle master tick)."""
+    clock = FakeClock()
+    hb = HeartbeatMonitor(timeout_s=3.0, clock=clock)
+    hb.beat("a")
+    hb.beat("b")
+    clock.t = 10.0
+    assert hb.dead() == {"a", "b"}
+    hb.forget("b")
+    assert hb.dead() == {"a"}
+    assert hb.alive() == set()
+    hb.forget("ghost")                  # unknown worker: a quiet no-op
+    assert hb.dead() == {"a"}
+    hb.beat("b")                        # a rejoin starts tracking afresh
+    assert hb.alive() == {"b"}
+
+
+def test_work_queue_fail_worker_without_leases_keeps_ledger_clean():
+    """Regression: failing a worker that holds NOTHING used to plant a
+    phantom zero-count entry in `redelivered_from` (Counter += 0), so
+    per-worker reports charged redeliveries to workers that never lost
+    a lease. Only workers whose leases actually came back may appear."""
+    q = WorkQueue(4, clock=FakeClock())
+    assert q.fail_worker("idle") == []
+    assert "idle" not in q.redelivered_from
+    q.lease("w1", 2)
+    assert sorted(q.fail_worker("w1")) == [0, 1]
+    assert q.redelivered_from == {"w1": 2}
+    assert q.fail_worker("w1") == []     # second fail: nothing held now
+    assert q.redelivered_from == {"w1": 2}
+    assert q.redeliveries == 2
+
+
 def test_straggler_detector():
     clock = FakeClock()
     sd = StragglerDetector(factor=2.0, min_history=5, clock=clock)
