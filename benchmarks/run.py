@@ -22,7 +22,11 @@ def smoke(chaos_seed=None):
     and zero lost or duplicated chunks. Then the PROCESS-mode FT gate: the
     same recovery story on 2 REAL worker processes over the proc
     transport, one SIGKILLed mid-stream — zero lost/duplicate chunks,
-    output bit-identical to two_phase. Then the cache gate: the same tiny
+    output bit-identical to two_phase. Then the STORE-DATA-PLANE gate: the
+    same stream over 2 real workers on the TCP transport twice, socket
+    plane vs store plane — the store run must cut the socket's data-plane
+    bytes (dist_fetch_bytes_total + dist_push_bytes_total, per plane) by
+    >= 90% while staying bit-identical. Then the cache gate: the same tiny
     stream twice through CachedPlan over a fresh store — the second pass
     must be >= 90% hits with survivor masks bit-identical to the uncached
     reference. Then the async-pipeline gate: `--plan async --depth 4` on a
@@ -92,6 +96,11 @@ def smoke(chaos_seed=None):
         failures.append("proc-ft")
         traceback.print_exc()
     try:
+        _store_plane_smoke(np, cfg, Preprocessor)
+    except Exception:
+        failures.append("store-plane")
+        traceback.print_exc()
+    try:
         _cache_smoke(np, cfg, Preprocessor, stream, ref)
     except Exception:
         failures.append("cache")
@@ -121,7 +130,7 @@ def smoke(chaos_seed=None):
     except Exception:
         failures.append("chaos")
         traceback.print_exc()
-    n_gates = len(PLANS) + 8
+    n_gates = len(PLANS) + 9
     print(f"\nsmoke: {n_gates - len(failures)}/{n_gates} "
           f"gates OK" + (f"; FAILED: {failures}" if failures else ""))
     raise SystemExit(1 if failures else 0)
@@ -202,6 +211,74 @@ def _proc_ft_smoke(np, cfg, Preprocessor):
           f"once (per-worker {done}), redeliveries="
           f"{pre.plan.redeliveries}, cleaned bit-identical to two_phase "
           f"in {time.time() - t0:.1f}s")
+
+
+def _store_plane_smoke(np, cfg, Preprocessor):
+    """Store-data-plane gate: the same seeded stream over 2 REAL worker
+    processes on the TCP transport (loopback) twice — once on the socket
+    data plane (chunk batches and result payloads cross the master's
+    control socket) and once on the store data plane (bytes move through
+    a shared ChunkStore; the socket carries content keys). The store run
+    must cut the master's data-plane socket bytes by >= 90% — measured
+    from dist_fetch_bytes_total{plane} + dist_push_bytes_total{plane} —
+    with ZERO payload bytes on the socket plane, and both runs must be
+    bit-identical to each other and to two_phase."""
+    import shutil
+    import tempfile
+
+    from repro.data.loader import audio_batch_maker, make_shard_pool
+    from repro.obs import metrics as obs_metrics
+
+    t0 = time.time()
+    n_batches = 4
+    make = audio_batch_maker(seed=11, batch_long_chunks=1)
+    reg = obs_metrics.get_registry()
+
+    def plane_bytes(plane):
+        return sum(
+            reg.counter(name, labels=("plane",)).labels(plane=plane).value
+            for name in ("dist_fetch_bytes_total", "dist_push_bytes_total"))
+
+    tmp = tempfile.mkdtemp(prefix="smoke_dplane_")
+    try:
+        runs, wire = {}, {}
+        for mode in ("socket", "store"):
+            pool = make_shard_pool(make, n_batches, 2,
+                                   lease_timeout_s=120.0)
+            kw = {"data_plane": tmp} if mode == "store" else {}
+            before = {p: plane_bytes(p) for p in ("socket", "store")}
+            pre = Preprocessor(cfg, plan="sharded", shards=2,
+                               pad_multiple=1, transport="tcp",
+                               lease_items=2, **kw)
+            runs[mode] = sorted(pre.run(pool), key=lambda r: r.wid)
+            delta = {p: plane_bytes(p) - before[p]
+                     for p in ("socket", "store")}
+            wire[mode] = delta[mode]
+            other = "store" if mode == "socket" else "socket"
+            assert delta[other] == 0, \
+                f"{mode} run leaked {delta[other]} bytes onto the " \
+                f"{other} plane"
+            wids = [r.wid for r in runs[mode]]
+            assert wids == list(range(n_batches)), \
+                f"{mode} run lost/duplicated chunks: {wids}"
+        ref = Preprocessor(cfg, plan="two_phase", pad_multiple=1)
+        for a, b in zip(runs["socket"], runs["store"]):
+            want = ref(make(a.wid)[0])
+            for r in (a, b):
+                np.testing.assert_array_equal(np.asarray(r.det.keep),
+                                              np.asarray(want.det.keep))
+                np.testing.assert_array_equal(r.cleaned, want.cleaned)
+        cut = 1.0 - wire["store"] / wire["socket"]
+        assert cut >= 0.9, \
+            f"store plane cut only {cut:.1%} of data-plane socket bytes " \
+            f"({wire['store']:.0f} vs {wire['socket']:.0f})"
+        print(f"plan store-dp   OK: 2 real workers over tcp, store plane "
+              f"carried {wire['store']:.0f} B of keys vs "
+              f"{wire['socket']:.0f} B of payloads on the socket plane "
+              f"({cut:.1%} cut), bit-identical to two_phase, "
+              f"in {time.time() - t0:.1f}s")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
 
 
 def _cache_smoke(np, cfg, Preprocessor, stream, ref):
@@ -628,7 +705,8 @@ def main():
                             bench_early_exit, bench_cache,
                             bench_dispatch_depth, bench_queue_depth,
                             bench_serving, bench_fused_tail,
-                            bench_obs_overhead, bench_chaos)
+                            bench_obs_overhead, bench_chaos,
+                            bench_scaling_real)
     steps = [
         ("Table 1 / Fig 1: stage times",
          lambda: bench_stage_times.run(minutes=minutes)),
@@ -646,6 +724,9 @@ def main():
          lambda: bench_queue_depth.run(
              minutes=8.0 if not args.full else 16.0)),
         ("Figs 11-13: scaling", lambda: bench_scaling.run(hours=hours)),
+        ("Figs 11-12 measured: real-process scaling (tcp + store plane)",
+         lambda: bench_scaling_real.run(
+             shards=(1, 2, 4, 8, 16) if args.full else (1, 2, 4))),
         ("Figs 14-18: load balance",
          lambda: bench_load_balance.run(hours=hours)),
         ("Figs 19-20: utilisation",

@@ -10,6 +10,13 @@
 #      processes over the repro.dist proc transport, one SIGKILLed
 #      mid-stream while holding a lease: zero lost/duplicate chunks,
 #      output bit-identical to two_phase —
+#      PLUS the store-data-plane gate — the same stream over 2 REAL
+#      worker processes on the TCP transport twice, socket data plane vs
+#      store data plane (chunk batches and result payloads through a
+#      shared ChunkStore, the socket carrying only content keys): the
+#      store run must cut the master's data-plane socket bytes by >= 90%
+#      (measured from dist_fetch_bytes_total{plane} +
+#      dist_push_bytes_total{plane}) while staying bit-identical —
 #      PLUS the cache gate — the same tiny stream twice through
 #      CachedPlan over a fresh store: the second pass must be >= 90%
 #      cache hits with survivor masks bit-identical to the uncached plan —

@@ -55,8 +55,25 @@ the execution strategy. Six plans, and when to pick each:
                                     messages over authen-    and the stream
                                     ticated localhost        still emits each
                                     sockets                  chunk exactly once
+                        "tcp"       real OS processes over   workers on OTHER
+                                    a non-loopback bind      hosts; pair with
+                                    (0.0.0.0 + advertised    `data_plane=` so
+                                    dial address); workers   the master socket
+                                    join by announcing at    carries only
+                                    hello (registry), same   leases, ids, acks
+                                    wire protocol as proc
 
-                      Workers lease work ids in batches (`lease_items`,
+                      `data_plane=` (a ChunkStore, directory path, or
+                      `repro.dist.StoreDataPlane`) moves chunk bytes OFF
+                      the master's control socket: leases arrive as
+                      content keys (`lease_chunks`), workers read raw
+                      batches from and push results into the shared
+                      store, and the master materialises payloads by key
+                      at acceptance — fetch/push socket traffic drops
+                      ≥90% per chunk (graded by the smoke gate via
+                      `dist_fetch_bytes_total{plane}`). Works under
+                      "proc" too; it is what makes "tcp" scale past one
+                      box. Workers lease work ids in batches (`lease_items`,
                       the paper's Table 7 `max_queue_size` knob —
                       amortizes queue round-trips against redelivery
                       exposure), at-least-once redelivery on lease expiry
@@ -197,8 +214,9 @@ from repro.core.graph import (GraphValidationError, PipelineGraph,
                               PipelineOutput)
 from repro.data.loader import ShardedLoader, make_shard_pool
 from repro.data.queue import WorkQueue
+from repro.dist.data_plane import StoreDataPlane
 from repro.dist.service import QueueService, pack_result, unpack_result
-from repro.dist.transport import ProcTransport
+from repro.dist.transport import ProcTransport, TcpTransport
 from repro.distributed.sharding import NULL_RULES
 from repro.ft.failure import StragglerDetector
 from repro.kernels import backend
@@ -650,7 +668,11 @@ class FleetControl:
     def spawn(self, shard=None):
         """Spawn a late joiner (next free shard id unless given). The new
         worker hellos into the in-progress run, gets the same setup blob,
-        and starts leasing from the shared queue."""
+        and starts leasing from the shared queue. The shard id never
+        rides argv: it is RESERVED with the service registry against the
+        child's pid, and the worker adopts it when its announce-hello
+        lands (so handles/injector stay keyed by shard while workers stay
+        address-by-registration)."""
         with self._lock:
             if shard is None:
                 shard = self._next
@@ -658,6 +680,7 @@ class FleetControl:
         h = self.transport.spawn_worker(shard,
                                         lease_items=self.plan.lease_items,
                                         poll_s=self.plan.worker_poll_s)
+        self.service.reserve(h.pid, int(shard))
         self.handles[int(shard)] = h
         if self.plan.injector is not None:
             self.plan.injector.attach(int(shard), h.pid)
@@ -717,9 +740,10 @@ class ShardedPlan(TwoPhasePlan):
 
     `rules` may be a single ShardingRules (shared mesh) or one per shard
     (`distributed.sharding.pool_rules`); compiles land in the shared
-    CompileCache keyed by each shard's value fingerprint. (Proc workers
-    compile in their own processes — per-host meshes are the multi-host
-    TCP future, not this transport.)
+    CompileCache keyed by each shard's value fingerprint. (Proc/tcp
+    workers compile in their own processes; under `transport="tcp"` they
+    may live on other hosts entirely — pair with `data_plane=` so chunk
+    bytes move through the shared store, not the master's socket.)
     """
     name = "sharded"
     accepts_rules_pool = True
@@ -729,7 +753,7 @@ class ShardedPlan(TwoPhasePlan):
                  transport="inproc", worker_poll_s=0.05,
                  stall_timeout_s=300.0, lease_timeout_s=None,
                  telemetry=None, speculate=None, straggler_factor=2.0,
-                 straggler_min_history=4, elastic=False):
+                 straggler_min_history=4, elastic=False, data_plane=None):
         self.shards = max(1, int(shards))
         if isinstance(rules, (list, tuple)):
             if len(rules) != self.shards:
@@ -770,8 +794,16 @@ class ShardedPlan(TwoPhasePlan):
         # empty fleet is a moment, not a verdict — late joiners may be a
         # spawn away (the stall timeout stays as the real backstop)
         self.elastic = bool(elastic)
+        # store data plane (ChunkStore | directory | StoreDataPlane):
+        # chunk bytes move through a shared store, the control socket
+        # carries content keys — proc/tcp transports only.
+        self.data_plane = data_plane
         self.fleet = None               # FleetControl while _run_proc lives
-        self._transport_kind()          # validate early, not mid-stream
+        kind = self._transport_kind()   # validate early, not mid-stream
+        if data_plane is not None and kind == "inproc":
+            raise ValueError("data_plane= rides the proc/tcp worker "
+                             "runtime; the in-proc simulated loop never "
+                             "serializes chunks")
         self.rebalancer = SCHED.Rebalancer(self.shards, pad_multiple)
         self.redeliveries = 0           # mirrored off the queue after run()
         self.speculations = 0           # mirrored off the queue after run()
@@ -783,12 +815,12 @@ class ShardedPlan(TwoPhasePlan):
     def _transport_kind(self) -> str:
         t = self.transport
         if isinstance(t, str):
-            if t not in ("inproc", "proc"):
+            if t not in ("inproc", "proc", "tcp"):
                 raise ValueError(f"unknown transport {t!r} "
-                                 "(expected 'inproc' or 'proc')")
+                                 "(expected 'inproc', 'proc' or 'tcp')")
             return t
         kind = getattr(t, "name", None)
-        if kind not in ("inproc", "proc"):
+        if kind not in ("inproc", "proc", "tcp"):
             raise ValueError(f"transport object {t!r} names no known kind")
         return kind
 
@@ -873,7 +905,8 @@ class ShardedPlan(TwoPhasePlan):
 
         timeout = self.lease_timeout_s
         if timeout is None:
-            timeout = 300.0 if self._transport_kind() == "proc" else 60.0
+            timeout = 300.0 if self._transport_kind() in ("proc", "tcp") \
+                else 60.0
         pool = make_shard_pool(make, n, self.shards,
                                lease_items=self.lease_items,
                                lease_timeout_s=timeout)
@@ -895,7 +928,7 @@ class ShardedPlan(TwoPhasePlan):
             raise ValueError(
                 f"pool shard ids {bad} out of range for a "
                 f"{self.shards}-shard plan")
-        if self._transport_kind() == "proc":
+        if self._transport_kind() in ("proc", "tcp"):
             yield from self._run_proc(pool, queue)
         else:
             yield from self._run_sim(pool, queue)
@@ -904,7 +937,7 @@ class ShardedPlan(TwoPhasePlan):
         """The speculation arm: a StragglerDetector for the QueueService,
         or None. Default (speculate=None) arms it only under proc
         transport — see __init__."""
-        on = (kind == "proc") if self.speculate is None \
+        on = (kind in ("proc", "tcp")) if self.speculate is None \
             else bool(self.speculate)
         if not on:
             return None
@@ -1010,13 +1043,23 @@ class ShardedPlan(TwoPhasePlan):
             extras[wid] = extra
             return np.asarray(chunks, np.float32)
 
+        dp = self.data_plane
+        if dp is not None and not isinstance(dp, StoreDataPlane):
+            # share the CompileCache/CachedPlan value identity so raw
+            # entries dedup across runs of the same graph + backend
+            dp = StoreDataPlane(dp, graph_fingerprint=self.graph.fingerprint,
+                                backend_mode=backend.get_mode())
         service = QueueService(queue, fetch_item=fetch,
                                setup=self._proc_setup(),
                                monitor=self.monitor,
                                telemetry=self.telemetry,
-                               straggler=self._make_straggler("proc"))
-        tp = self.transport if not isinstance(self.transport, str) \
-            else ProcTransport()
+                               straggler=self._make_straggler("proc"),
+                               data_plane=dp)
+        if not isinstance(self.transport, str):
+            tp = self.transport
+        else:
+            tp = TcpTransport() if self.transport == "tcp" \
+                else ProcTransport()
         handles = {}
         if self.injector is not None:
             def on_grant(worker, wid):
@@ -1072,6 +1115,11 @@ class ShardedPlan(TwoPhasePlan):
             drained = service.pop_results()
             if drained:
                 last_progress = time.monotonic()
+                # store data plane: pushes are key refs — materialize the
+                # payloads here, master-side, off the RPC handler threads
+                # (losing incarnations cost one redundant store read)
+                drained = [(w, wid, service.resolve_result(p))
+                           for w, wid, p in drained]
                 self._note_assignment(service, drained)
             for worker, wid, payload in drained:
                 # the winner's name rides into complete() so a lost
@@ -1299,17 +1347,10 @@ class CachedPlan(ExecutionPlan):
 
     # one codec for "masks + stats + cleaned, wave5 reduced to its width":
     # repro.dist's pack_result/unpack_result — the store entry and the
-    # worker result payload are the SAME shape, so a new detector output
-    # is added in exactly one place (the array/meta split is derived by
-    # type, never by a key list that could drift from the codec)
-
-    def _entry(self, res: BatchResult):
-        p = pack_result(res)
-        arrays = {k: v for k, v in p.items()
-                  if isinstance(v, np.ndarray)}
-        meta = {k: v for k, v in p.items()
-                if not isinstance(v, np.ndarray)}
-        return arrays, meta
+    # worker result payload are the SAME shape (ChunkStore.put_payload
+    # derives the array/meta split by type, never by a key list that
+    # could drift from the codec), which is also what lets the dist
+    # store data plane push worker results straight into a ChunkStore
 
     def _result(self, arrays, meta, wid, extra) -> BatchResult:
         det, f = unpack_result({**arrays, **meta})
@@ -1331,7 +1372,7 @@ class CachedPlan(ExecutionPlan):
         if hit is not None:
             return self._result(*hit, wid=None, extra=None)
         res = self.inner(x)
-        self.store.put(key, *self._entry(res))
+        self.store.put_payload(key, pack_result(res))
         return res
 
     # -- streams ------------------------------------------------------------
@@ -1429,7 +1470,7 @@ class CachedPlan(ExecutionPlan):
                                                  len(misses))):
                 pos, key, wid, _, extra = misses[res.wid]
                 if self.store is not None:
-                    self.store.put(key, *self._entry(res))
+                    self.store.put_payload(key, pack_result(res))
                 results[pos] = replace(res, wid=wid, labels=extra)
                 yield from emit_ready()
         yield from emit_ready()

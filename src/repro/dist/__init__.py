@@ -1,25 +1,40 @@
 """repro.dist — the master/worker runtime behind the multi-shard plans.
 
-Three pieces, three files:
+Four pieces, four files:
 
   * `service.QueueService` — the master's RPC surface over one shared
     `data.queue.WorkQueue` (lease / complete / heartbeat / fail_worker /
     state) plus the data plane (fetch a chunk batch, push a result) and
-    per-worker progress accounting.
-  * `transport` — how that surface is reached: `InProcTransport` (direct
-    calls, the simulated single-process mode `ShardedPlan` always had) and
-    `ProcTransport` (pickled messages over authenticated localhost
-    sockets, real OS worker processes spawned via
-    `python -m repro.dist.worker`).
-  * `worker` — the worker runtime: owns its shard's jits, pulls leases in
-    batches (`--lease-items`, the paper's Table 7 queue-size knob), runs
-    detect+tail locally, streams results back, heartbeats.
+    per-worker progress accounting. `hello` is a registry: workers
+    ANNOUNCE themselves and are assigned their identity there (honoring
+    spawn-time `reserve(pid, shard)` pins) — no shard ids on argv.
+  * `transport` — how that surface is reached:
+
+      transport        wire                        scope
+      ---------        ------------------------   --------------------
+      InProcTransport  direct calls, no pickling   simulated mode, tests
+      ProcTransport    authenticated localhost      real processes, one
+                       sockets (authkey env-only)   box
+      TcpTransport     same protocol, non-loopback  real processes, many
+                       bind + advertised address    boxes
+
+  * `data_plane.StoreDataPlane` — the off-master data plane: raw chunk
+    batches and result payloads move through a shared `ChunkStore`
+    (content-addressed keys ride the `lease_chunks` grant and the
+    `push_result` ref), so the master's socket carries only leases, ids,
+    and acks. Byte traffic per plane is counted under
+    `dist_fetch_bytes_total{plane}` / `dist_push_bytes_total{plane}`.
+  * `worker` — the worker runtime: announces at `hello`, owns its
+    shard's jits, pulls leases in batches (`--lease-items`, the paper's
+    Table 7 queue-size knob), fetches from the socket or the store,
+    runs detect+tail locally, streams results back, heartbeats.
 """
+from repro.dist.data_plane import StoreDataPlane
 from repro.dist.service import (QueueService, WorkerStats, pack_result,
                                 unpack_result)
 from repro.dist.transport import (InProcTransport, ProcTransport,
-                                  RemoteError, WorkerHandle)
+                                  RemoteError, TcpTransport, WorkerHandle)
 
 __all__ = ["QueueService", "WorkerStats", "pack_result", "unpack_result",
-           "InProcTransport", "ProcTransport", "RemoteError",
-           "WorkerHandle"]
+           "InProcTransport", "ProcTransport", "TcpTransport",
+           "RemoteError", "WorkerHandle", "StoreDataPlane"]

@@ -1,0 +1,102 @@
+"""The off-master data plane: chunk bytes move through a shared store.
+
+With the socket data plane, every raw chunk batch and every result
+payload crosses the master's one control socket (`fetch_many` /
+`push_result` carry megabytes) — the master becomes the bandwidth
+bottleneck the moment workers leave the box, which is exactly the
+regime the paper's 8-VM scaling curve lives in. `StoreDataPlane` moves
+the bytes to a shared `ChunkStore` backend (any directory both sides
+can reach: local disk on one box, NFS/fuse mounts across hosts):
+
+  * master `offer(wid, chunks)` publishes a raw batch under a
+    content-addressed key (`raw-<content_key>`) and hands the KEY to
+    the worker inside the lease reply (`lease_chunks` RPC) — the
+    socket carries ~70 bytes instead of the batch;
+  * worker `fetch_chunks(key)` reads the raw batch from the store,
+    computes, and `push(raw_key, payload)` writes the result under the
+    paired `res-<content_key>` entry (the `pack_result` payload is
+    already store-entry-shaped — `ChunkStore.put_payload` splits it),
+    returning the tiny `{"store_key": ...}` ref that rides
+    `push_result`;
+  * master `take(key)` materializes the payload at acceptance
+    (`ChunkStore.fetch`), after the exactly-once `complete()` gate has
+    already decided the incarnation won.
+
+Content addressing makes redelivery free: a SIGKILLed worker that
+pushed its result to the store but never got the ack leaves an entry
+the recomputing incarnation dedups against (`put` is first-write-wins;
+the second write is a counted no-op), and the master still accepts
+exactly once.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.store.chunk_store import ChunkStore, content_key
+
+RAW_PREFIX = "raw-"
+RESULT_PREFIX = "res-"
+
+
+def result_key(raw_key: str) -> str:
+    """The result entry paired with one raw entry: same content hash,
+    `res-` prefix. Computable by the worker from the lease alone."""
+    return RESULT_PREFIX + raw_key.split("-", 1)[1]
+
+
+class StoreDataPlane:
+    """Shared-store data plane for the dist runtime.
+
+    Wraps one `ChunkStore` (or a directory path) that master and
+    workers both open. The master constructs it with the run's graph
+    fingerprint + backend mode so raw keys share the CompileCache /
+    CachedPlan value identity; workers reconstruct it from `spec()`
+    shipped in the `hello` setup blob (they never hash — keys arrive
+    in leases, result keys derive from them).
+    """
+
+    kind = "store"
+
+    def __init__(self, store, graph_fingerprint=None, backend_mode=None):
+        if isinstance(store, (str, os.PathLike)):
+            store = ChunkStore(store)
+        self.store = store
+        self._fingerprint = graph_fingerprint
+        self._backend_mode = backend_mode
+
+    def spec(self) -> dict:
+        """JSON-safe description a worker rebuilds its handle from."""
+        return {"kind": self.kind, "dir": self.store.directory}
+
+    # -- master side ---------------------------------------------------------
+    def offer(self, wid, chunks) -> str:
+        """Publish one raw chunk batch; return its content key. Repeat
+        offers of identical content (redelivery, speculation) dedup on
+        the store's first-write-wins `put`."""
+        arr = np.ascontiguousarray(np.asarray(chunks, np.float32))
+        key = RAW_PREFIX + content_key(arr, self._fingerprint,
+                                       self._backend_mode)
+        if key not in self.store:
+            self.store.put(key, {"chunks": arr}, meta={"wid": int(wid)})
+        return key
+
+    def take(self, key):
+        """Materialize a result payload at acceptance (None on miss)."""
+        return self.store.fetch(key)
+
+    # -- worker side ---------------------------------------------------------
+    def fetch_chunks(self, key):
+        """Read one raw chunk batch by lease key (None on miss)."""
+        hit = self.store.get(key)
+        if hit is None:
+            return None
+        return np.asarray(hit[0]["chunks"], np.float32)
+
+    def push(self, raw_key, payload) -> dict:
+        """Write one result payload under the key paired with its raw
+        entry; return the small ref dict that rides `push_result`."""
+        key = result_key(raw_key)
+        self.store.put_payload(key, payload)
+        return {"store_key": key}

@@ -35,11 +35,13 @@ from repro.obs import tracing as obs_tracing
 # snapshot of the master's registry (scrape endpoint over the transport).
 # `drain`/`draining` are the graceful-leave pair: a departing worker (or
 # the master's autoscaler) calls `drain`, the worker polls `draining` and
-# exits once its held leases are finished.
+# exits once its held leases are finished. `lease_chunks` is the store
+# data plane's lease: grants ride back as (wid, content key) pairs so the
+# socket never carries chunk bytes.
 RPC_METHODS = frozenset({
-    "hello", "lease", "fetch", "fetch_many", "complete", "push_result",
-    "heartbeat", "fail_worker", "state", "progress", "finished",
-    "next_deadline", "bye", "metrics", "drain", "draining",
+    "hello", "lease", "lease_chunks", "fetch", "fetch_many", "complete",
+    "push_result", "heartbeat", "fail_worker", "state", "progress",
+    "finished", "next_deadline", "bye", "metrics", "drain", "draining",
 })
 
 # Worker membership states (WorkerStats.state). Transitions bump the
@@ -104,14 +106,26 @@ class QueueService:
     """
 
     def __init__(self, queue, fetch_item=None, setup=None, monitor=None,
-                 telemetry=None, straggler=None):
+                 telemetry=None, straggler=None, data_plane=None):
         self.queue = queue
         self._fetch_item = fetch_item
         self._setup = dict(setup or {})
         self.monitor = monitor
         self.telemetry = telemetry
         self.straggler = straggler
+        # optional StoreDataPlane: when set, workers lease via
+        # `lease_chunks` (keys, not bytes) and push tiny store refs — the
+        # control socket stops carrying chunk payloads entirely.
+        self.data_plane = data_plane
         self.workers: dict[str, WorkerStats] = {}
+        # registry assignment state: pid -> shard reservations made
+        # master-side at spawn, and the next free shard id for workers
+        # that join with no reservation (a hand-started remote worker).
+        self._reserved: dict[int, int] = {}
+        self._next_shard = 0
+        # wid -> offered store key (lease_chunks): a redelivered or
+        # speculated lease re-offers without re-hashing the batch.
+        self._offered: dict[int, str] = {}
         self.lease_calls = 0
         # membership epoch: a version counter over the worker set; every
         # join, drain, departure, and observed death bumps it (gauged as
@@ -241,17 +255,44 @@ class QueueService:
             "speculated": tl.get("speculated", 0)}
 
     # -- RPC surface --------------------------------------------------------
-    def hello(self, worker, pid=None, shard=-1):
+    def reserve(self, pid, shard):
+        """Master-side (NOT served): pin the shard id a spawned process
+        will be assigned when its `hello` lands. The spawn path calls
+        this right after Popen, long before the child can finish its
+        interpreter start-up, so handles/injectors keyed by shard stay
+        valid without a shard ever riding argv."""
+        with self.queue.lock:
+            self._reserved[int(pid)] = int(shard)
+            self._next_shard = max(self._next_shard, int(shard) + 1)
+
+    def hello(self, worker=None, pid=None, shard=-1):
         """Worker sign-in: registers identity, returns the setup blob —
         the SAME blob whether the worker is part of the original fleet or
         joins a run already in progress (late joiners are how an elastic
         fleet absorbs churn). A rejoin after departure/death is a fresh
         incarnation: state returns to active and the epoch bumps.
-        When the master has a live tracer, its propagation context (trace
-        id + run-span parent id) rides along under "trace" — that is how
-        worker-side spans get parented under the master's run span across
-        the pickle boundary."""
+
+        With `worker=None` the caller is ANNOUNCING, not asserting, its
+        identity (the saxml join pattern): the registry assigns it the
+        shard reserved for its pid at spawn — or the next free id for a
+        walk-up joiner — and ships the assignment back in the setup blob
+        under "assigned". When the master has a live tracer, its
+        propagation context rides along under "trace"; when a store data
+        plane is configured, its spec rides under "data_plane"."""
+        assigned = None
         with self.queue.lock:
+            if worker is None:
+                shard = self._reserved.pop(int(pid), None) \
+                    if pid is not None else None
+                if shard is None:
+                    shard = self._next_shard
+                self._next_shard = max(self._next_shard, int(shard) + 1)
+                worker = f"shard{int(shard)}"
+                assigned = {"worker": worker, "shard": int(shard)}
+            elif int(shard) >= 0:
+                # explicit identities keep the assignment counter ahead
+                # so a later announce never collides with them
+                self._next_shard = max(self._next_shard, int(shard) + 1)
             known = worker in self.workers
             st = self._w(worker)
             st.pid, st.shard = pid, int(shard)
@@ -265,10 +306,15 @@ class QueueService:
                 self.epoch += 1
                 self._publish_membership()
         prop = obs_tracing.get_tracer().propagate()
-        if prop is None:
+        if prop is None and assigned is None and self.data_plane is None:
             return self._setup
         setup = dict(self._setup)
-        setup["trace"] = prop
+        if prop is not None:
+            setup["trace"] = prop
+        if assigned is not None:
+            setup["assigned"] = assigned
+        if self.data_plane is not None:
+            setup["data_plane"] = self.data_plane.spec()
         return setup
 
     def lease(self, worker, max_items=1):
@@ -339,29 +385,85 @@ class QueueService:
         if self.straggler is not None:
             for wid in wids:
                 self.straggler.complete(wid)
+        for wid in wids:           # retired ids never get re-offered
+            self._offered.pop(wid, None)
 
-    def fetch(self, wid):
-        """Data plane: the chunk batch for one leased work id."""
+    def lease_chunks(self, worker, max_items=1):
+        """Store-plane lease: grant work ids AND publish their raw chunk
+        batches to the shared store in the same round-trip, returning
+        [[wid, key], ...] — the socket carries content keys (~70 bytes),
+        never the batches. A key of None means the id retired between
+        grant and offer (a redelivery race); the worker skips it. This is
+        the whole data plane collapsed into the lease call: zero
+        `fetch`/`fetch_many` round-trips remain."""
+        if self.data_plane is None:
+            raise RuntimeError("this QueueService has no store data plane")
+        ids = self.lease(worker, max_items)
+        with self.queue.lock:    # one pass over the key manifest, not per-item
+            cached = {wid: self._offered.get(wid) for wid in ids}
+        out, fresh = [], {}
+        for wid in ids:
+            item = self._materialize(wid)
+            if item is None:     # retired between grant and offer
+                out.append([wid, None])
+                continue
+            key = cached.get(wid)
+            if key is None:      # first offer: hash + publish once
+                key = fresh[wid] = self.data_plane.offer(wid, item)
+            self._note_fetch(wid, item, plane="store", key=key)
+            out.append([wid, key])
+        if fresh:
+            with self.queue.lock:
+                self._offered.update(fresh)
+        return out
+
+    def _materialize(self, wid):
+        """wid -> chunk batch via the master's loader (None when retired)."""
         if self._fetch_item is None:
             raise RuntimeError("this QueueService serves no data plane "
                                "(no fetch_item)")
-        item = self._fetch_item(wid)
-        if self.telemetry is not None and item is not None:
-            raw = np.ascontiguousarray(item)
+        return self._fetch_item(wid)
+
+    def _note_fetch(self, wid, item, plane, key=None):
+        """Per-item data-plane accounting: the socket plane is charged
+        the batch's bytes, the store plane only the key that replaced
+        them — `dist_fetch_bytes_total{plane}` is how the smoke gate
+        proves the ≥90% cut."""
+        raw = np.ascontiguousarray(item)
+        wire = len(key) if plane == "store" else int(raw.nbytes)
+        obs_metrics.counter(
+            "dist_fetch_bytes_total",
+            "data-plane bytes the master's socket carried for chunk "
+            "fetches", ("plane",)).labels(plane=plane).inc(wire)
+        if self.telemetry is not None:
             with self.queue.lock:
                 tl = self._timeline.setdefault(wid, {})
                 tl["fetch_ts"] = time.time()
                 tl["bytes_in"] = int(raw.nbytes)
-                tl["content_key"] = hashlib.sha256(
-                    raw.tobytes()).hexdigest()[:16]
+                tl["content_key"] = key[:21] if key is not None else \
+                    hashlib.sha256(raw.tobytes()).hexdigest()[:16]
+
+    def fetch(self, wid):
+        """Data plane (socket plane): the chunk batch for one leased work
+        id, materialized master-side and shipped over the control socket."""
+        item = self._materialize(wid)
+        if item is not None:
+            self._note_fetch(wid, item, plane="socket")
         return item
 
     def fetch_many(self, worker, wids):
         """Batched data plane: one round-trip for a whole lease batch
         (without this, lease_items > 1 would amortize the lease call only
-        to re-pay per-item fetch RTTs). Doubles as a heartbeat — the
-        worker is provably alive and about to be busy for a while."""
-        items = [self.fetch(wid) for wid in wids]
+        to re-pay per-item fetch RTTs). One server-side pass — the batch
+        is materialized and accounted item by item but heartbeats ONCE,
+        and with a store data plane configured it degrades gracefully to
+        the socket-plane fallback (the bytes still flow, still counted).
+        Doubles as a heartbeat — the worker is provably alive and about
+        to be busy for a while."""
+        items = [self._materialize(wid) for wid in wids]
+        for wid, item in zip(wids, items):
+            if item is not None:
+                self._note_fetch(wid, item, plane="socket")
         self.heartbeat(worker)
         return items
 
@@ -398,7 +500,17 @@ class QueueService:
         here and discarded there — exactly-once stays the master's call
         (and so does `chunks_done` credit, via `note_done`). Each push
         extends the worker's remaining leases: mid-batch progress IS a
-        heartbeat."""
+        heartbeat. On the store data plane the payload is a tiny
+        `{"store_key": ...}` ref (the result bytes went to the shared
+        store); either way the bytes this socket carried are counted
+        under `dist_push_bytes_total{plane}`."""
+        plane = ("store" if isinstance(payload, dict)
+                 and "store_key" in payload else "socket")
+        obs_metrics.counter(
+            "dist_push_bytes_total",
+            "data-plane bytes the master's socket carried for result "
+            "pushes", ("plane",)).labels(plane=plane).inc(
+                _payload_nbytes(payload))
         with self.queue.lock:
             self.queue.heartbeat_extend(worker)
             self._w(worker).last_beat = self.queue.clock()
@@ -485,6 +597,21 @@ class QueueService:
                 out.append(self._results.popleft())
         return out
 
+    def resolve_result(self, payload):
+        """Materialize a store-plane result ref into the full payload
+        (`ChunkStore.fetch` by key); socket-plane payloads pass through.
+        Called by the master's emit loop — never in a handler thread, so
+        the store read happens off the RPC path."""
+        if (self.data_plane is not None and isinstance(payload, dict)
+                and "store_key" in payload):
+            full = self.data_plane.take(payload["store_key"])
+            if full is None:
+                raise RuntimeError(
+                    "store data plane lost result entry "
+                    f"{payload['store_key'][:21]}…")
+            return full
+        return payload
+
     def worker_report(self):
         """Snapshot of every known worker's progress, sorted by shard:
         leases held right now, chunks done, redeliveries charged to it,
@@ -530,6 +657,23 @@ class QueueService:
 
 
 # -------------------------------------------------------- result protocol
+
+def _payload_nbytes(payload) -> int:
+    """Wire-size estimate of one data-plane value: array bytes dominate;
+    strings/bytes count their length; scalars a flat 8. Close enough to
+    pickled size to grade the socket-vs-store byte cut."""
+    if payload is None:
+        return 0
+    if isinstance(payload, np.ndarray):
+        return int(payload.nbytes)
+    if isinstance(payload, dict):
+        return sum(_payload_nbytes(v) for v in payload.values())
+    if isinstance(payload, (list, tuple)):
+        return sum(_payload_nbytes(v) for v in payload)
+    if isinstance(payload, (str, bytes)):
+        return len(payload)
+    return 8
+
 
 def pack_result(res) -> dict:
     """BatchResult -> picklable payload (mirrors the store-entry layout:

@@ -17,12 +17,26 @@ A transport answers one question: how does a worker reach the master's
     `fail_worker` reclamation are exercised across a genuine process
     boundary, the way the paper's master survived crashed slaves.
 
-The authkey never rides the command line: it is handed to workers via the
-`REPRO_DIST_AUTHKEY` environment variable.
+  * `TcpTransport` — `ProcTransport` with a non-loopback bind address
+    (default `0.0.0.0`) and a separately advertised dial address, for
+    workers on OTHER hosts. Pair it with the store data plane
+    (`repro.dist.data_plane.StoreDataPlane` over a shared directory) so
+    the master's socket carries only leases, ids, and acks — the paper's
+    8-VM regime, where chunk bytes through one master socket would be
+    the bottleneck.
 
-What remains for multi-host: a TCP transport is this file with a
-non-loopback bind address plus a shared store for the data plane — the
-message protocol and the worker runtime would not change.
+Workers are addressed by REGISTRATION, not argv: `spawn_worker` never
+passes a shard id on the command line — the worker announces itself at
+`hello` (the saxml join/locate pattern) and the master assigns its
+identity there, honoring any `QueueService.reserve(pid, shard)` made at
+spawn time. A worker started by hand on another box
+(`python -m repro.dist.worker --master HOST:PORT`) joins the same way
+and receives the next free shard id.
+
+The authkey never rides the command line: it is handed to workers via the
+`REPRO_DIST_AUTHKEY` environment variable (never argv, never logged; a
+wrong key fails the connection handshake inside `Listener.accept()`, so
+no handler thread is ever spawned for an unauthenticated peer).
 """
 from __future__ import annotations
 
@@ -104,15 +118,17 @@ class _RpcProxy:
 
 
 class WorkerHandle:
-    """Master-side handle on one spawned worker process."""
+    """Master-side handle on one spawned worker process. `shard` is the
+    identity the master reserved for it at spawn (None for a worker left
+    to the registry's own assignment until its `hello` lands)."""
 
     def __init__(self, shard, proc):
-        self.shard = int(shard)
+        self.shard = None if shard is None else int(shard)
         self.proc = proc
 
     @property
-    def worker(self) -> str:
-        return f"shard{self.shard}"
+    def worker(self):
+        return None if self.shard is None else f"shard{self.shard}"
 
     @property
     def pid(self) -> int:
@@ -167,11 +183,14 @@ class WorkerHandle:
 
 
 class ProcTransport:
-    """Real-process transport over authenticated localhost sockets."""
+    """Real-process transport over authenticated sockets (loopback bind
+    by default; `host=` opens it up, `advertise_host=` overrides the
+    address handed to workers when the bind address is a wildcard)."""
     name = "proc"
 
-    def __init__(self, host="127.0.0.1", port=0):
+    def __init__(self, host="127.0.0.1", port=0, advertise_host=None):
         self._host, self._port = host, int(port)
+        self._advertise_host = advertise_host
         self._listener = None
         self._stop = threading.Event()
         self._authkey = None
@@ -186,7 +205,9 @@ class ProcTransport:
         self._listener = Listener((self._host, self._port),
                                   authkey=self._authkey.encode())
         host, port = self._listener.address
-        self.address = f"{host}:{port}"
+        adv = self._advertise_host or (
+            "127.0.0.1" if host in ("0.0.0.0", "::") else host)
+        self.address = f"{adv}:{port}"
         self._stop.clear()
         threading.Thread(target=self._accept_loop, args=(service,),
                          daemon=True, name="repro-dist-accept").start()
@@ -242,11 +263,16 @@ class ProcTransport:
             except OSError:
                 pass
 
-    def spawn_worker(self, shard, lease_items=1, poll_s=0.05,
+    def spawn_worker(self, shard=None, lease_items=1, poll_s=0.05,
                      env_extra=None) -> WorkerHandle:
         """Launch `python -m repro.dist.worker` against this transport's
         address. The child inherits stdio (worker tracebacks surface in
-        the master's terminal) and gets PYTHONPATH + the authkey via env."""
+        the master's terminal) and gets PYTHONPATH + the authkey via env.
+
+        No shard id rides the argv: the worker adopts its identity from
+        the registry at `hello`. `shard` here only stamps the returned
+        handle with the id the caller reserved master-side (via
+        `QueueService.reserve`); pass None for a pure late joiner."""
         if self.address is None:
             raise RuntimeError("serve() first: workers need an address")
         import repro
@@ -263,7 +289,7 @@ class ProcTransport:
         env.update(env_extra or {})
         proc = subprocess.Popen(
             [sys.executable, "-m", "repro.dist.worker",
-             "--master", self.address, "--shard", str(int(shard)),
+             "--master", self.address,
              "--lease-items", str(int(lease_items)),
              "--poll-s", str(float(poll_s))],
             env=env)
@@ -286,3 +312,18 @@ class ProcTransport:
             except OSError:
                 pass
             self._listener = None
+
+
+class TcpTransport(ProcTransport):
+    """ProcTransport with a non-loopback bind: serve on `0.0.0.0` (or an
+    explicit interface) so workers on other hosts can dial in, while the
+    wire protocol, authkey handshake, and worker runtime stay identical.
+    `advertise_host` is the address workers are told to dial — it
+    defaults to loopback for the wildcard bind (the single-box case the
+    tests and smoke gates run); set it to the master's routable address
+    when the fleet spans machines. Pair with `StoreDataPlane` over a
+    shared directory so chunk bytes never transit this socket."""
+    name = "tcp"
+
+    def __init__(self, host="0.0.0.0", port=0, advertise_host=None):
+        super().__init__(host=host, port=port, advertise_host=advertise_host)

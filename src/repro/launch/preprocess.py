@@ -62,12 +62,19 @@ def main(argv=None):
                     choices=sorted(PLANS))
     ap.add_argument("--shards", type=int, default=2,
                     help="shard / worker count for --plan sharded")
-    ap.add_argument("--transport", choices=("inproc", "proc"),
+    ap.add_argument("--transport", choices=("inproc", "proc", "tcp"),
                     default="inproc",
                     help="sharded worker runtime: 'inproc' simulates "
                          "every shard in this process (deterministic, "
                          "zero spawn cost); 'proc' runs real worker "
-                         "processes over the repro.dist socket transport")
+                         "processes over the repro.dist socket transport; "
+                         "'tcp' binds non-loopback so workers can join "
+                         "from other hosts (pair with --data-plane-store)")
+    ap.add_argument("--data-plane-store", default=None, metavar="DIR",
+                    help="move the sharded data plane off the master's "
+                         "socket: chunk bytes and result payloads flow "
+                         "through a shared ChunkStore at DIR, the socket "
+                         "carries only content keys (proc/tcp transports)")
     ap.add_argument("--no-speculate", action="store_true",
                     help="disable speculative re-lease of end-of-stream "
                          "stragglers (sharded plan; on by default under "
@@ -121,9 +128,16 @@ def main(argv=None):
         if args.no_speculate:
             ap.error("--no-speculate disables the sharded plan's "
                      f"speculative re-lease; plan '{args.plan}' has none")
+        if args.data_plane_store:
+            ap.error("--data-plane-store moves the sharded plan's worker "
+                     f"data plane; plan '{args.plan}' has no workers")
+    if args.data_plane_store and args.transport == "inproc":
+        ap.error("--data-plane-store rides the proc/tcp worker runtime "
+                 "(the in-proc simulated loop never serializes chunks)")
     rules = pool_rules(args.shards, mesh) if sharded else ShardingRules(mesh)
     plan_kwargs = {"shards": args.shards, "transport": args.transport,
                    "lease_items": args.lease_items,
+                   "data_plane": args.data_plane_store,
                    # None = the plan's default (on for proc workers)
                    "speculate": False if args.no_speculate else None} \
         if sharded else {}
@@ -163,7 +177,8 @@ def main(argv=None):
             seed=args.seed, n_batches=n_batches, n_shards=args.shards,
             batch_long_chunks=args.batch_long_chunks,
             lease_items=args.lease_items,
-            lease_timeout_s=300.0 if args.transport == "proc" else 60.0)
+            lease_timeout_s=300.0 if args.transport in ("proc", "tcp")
+            else 60.0)
     else:
         plan = args.plan
         loader = AudioChunkLoader(seed=args.seed, n_batches=n_batches,
@@ -236,7 +251,8 @@ def main(argv=None):
           f"{float(bs['imbalance_after_compact']):.3f} after compaction")
     if exec_plan.name == "sharded":
         asg = exec_plan.last_assignment
-        print(f"shards={args.shards} transport={args.transport} "
+        dp = " data_plane=store" if args.data_plane_store else ""
+        print(f"shards={args.shards} transport={args.transport}{dp} "
               f"lease_items={args.lease_items} "
               f"redeliveries={exec_plan.redeliveries} "
               f"speculations={exec_plan.speculations} "

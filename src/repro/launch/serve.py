@@ -81,6 +81,7 @@ def _audio_main(args):
                       min_workers=args.pool_min_workers,
                       max_workers=args.pool_max_workers,
                       speculate=args.pool_speculate,
+                      store=args.pool_store,
                       telemetry=telem).start()
     batcher = ContinuousBatcher(pool=pool, max_batch=args.max_batch,
                                 max_queue=args.max_queue,
@@ -164,7 +165,12 @@ def main(argv=None):
                          "request onto an idle worker (first completion "
                          "wins)")
     ap.add_argument("--pool-transport", default="proc",
-                    choices=("proc", "inproc"))
+                    choices=("proc", "inproc", "tcp"))
+    ap.add_argument("--pool-store", default=None, metavar="DIR",
+                    help="audio mode: store data plane — workers fetch "
+                         "chunks from / push results into a shared "
+                         "ChunkStore at DIR; the pool socket carries only "
+                         "leases and key refs")
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--rate-hz", type=float, default=1.0,
                     help="per-client mean arrival rate")

@@ -39,8 +39,9 @@ import numpy as np
 
 from repro.core.plans import BatchResult
 from repro.data.queue import StandingWorkQueue
+from repro.dist.data_plane import StoreDataPlane
 from repro.dist.service import QueueService, unpack_result
-from repro.dist.transport import InProcTransport, ProcTransport
+from repro.dist.transport import InProcTransport, ProcTransport, TcpTransport
 from repro.dist.worker import run_worker
 from repro.ft.failure import StragglerDetector
 from repro.kernels import backend
@@ -54,9 +55,16 @@ class WorkerPool:
       cfg              pipeline config (the setup blob workers build
                        their jits from — same facts ShardedPlan ships)
       workers          pool size
-      transport        "proc" (real processes, SIGKILL-able) or "inproc"
-                       (daemon threads driving the same worker runtime —
-                       tests and single-host serving without spawn cost)
+      transport        "proc" (real processes, SIGKILL-able), "tcp" (real
+                       processes over a non-loopback bind — workers may
+                       join from other hosts; pair with `store=`) or
+                       "inproc" (daemon threads driving the same worker
+                       runtime — tests and single-host serving without
+                       spawn cost)
+      store            optional shared-store data plane (a ChunkStore,
+                       directory path, or StoreDataPlane): request bytes
+                       and result payloads move through the store, the
+                       control socket carries only content keys
       stages           optional stage-name override (None = config list)
       pad_multiple / bucket
                        worker-side tail policy; "pow2" bounds tail
@@ -91,10 +99,10 @@ class WorkerPool:
                  min_workers=None, max_workers=None,
                  autoscale_backlog_s=0.75, autoscale_idle_s=5.0,
                  speculate=False, straggler_factor=2.0,
-                 straggler_min_history=4):
-        if transport not in ("proc", "inproc"):
+                 straggler_min_history=4, store=None):
+        if transport not in ("proc", "tcp", "inproc"):
             raise ValueError(f"unknown transport {transport!r} "
-                             "(expected 'proc' or 'inproc')")
+                             "(expected 'proc', 'tcp' or 'inproc')")
         self.cfg = cfg
         self.workers = max(1, int(workers))
         self.transport = transport
@@ -113,7 +121,7 @@ class WorkerPool:
         self._idle_since = None         # monotonic ts full idle first seen
         self.monitor = monitor
         if lease_timeout_s is None:
-            lease_timeout_s = 300.0 if transport == "proc" else 60.0
+            lease_timeout_s = 300.0 if transport in ("proc", "tcp") else 60.0
         self.queue = StandingWorkQueue(lease_timeout_s=lease_timeout_s)
         self._setup = {"cfg": cfg,
                        "stages": list(stages) if stages else None,
@@ -124,10 +132,12 @@ class WorkerPool:
         straggler = StragglerDetector(
             factor=float(straggler_factor),
             min_history=int(straggler_min_history)) if speculate else None
+        if store is not None and not isinstance(store, StoreDataPlane):
+            store = StoreDataPlane(store, backend_mode=backend.get_mode())
         self.service = QueueService(self.queue, fetch_item=self._fetch,
                                     setup=self._setup, monitor=monitor,
                                     telemetry=telemetry,
-                                    straggler=straggler)
+                                    straggler=straggler, data_plane=store)
         self._items = {}        # wid -> chunk bytes (the data plane)
         self._submit_t = {}     # wid -> submit time (oldest-age gauge)
         self._completed = {}    # wid -> BatchResult awaiting claim
@@ -147,8 +157,9 @@ class WorkerPool:
         if self._started:
             raise RuntimeError("pool already started")
         self._started = True
-        if self.transport == "proc":
-            self._tp = ProcTransport()
+        if self.transport in ("proc", "tcp"):
+            self._tp = TcpTransport() if self.transport == "tcp" \
+                else ProcTransport()
             self._tp.serve(self.service)
             for k in range(self.workers):
                 self._handles[k] = self._spawn(k)
@@ -160,8 +171,13 @@ class WorkerPool:
         return self
 
     def _spawn(self, shard):
-        return self._tp.spawn_worker(shard, lease_items=self.lease_items,
-                                     poll_s=self.poll_s)
+        # the shard id never rides argv: reserve it with the registry so
+        # the worker's announce-hello adopts it (handles/pids stay keyed
+        # by the id the pool chose)
+        h = self._tp.spawn_worker(shard, lease_items=self.lease_items,
+                                  poll_s=self.poll_s)
+        self.service.reserve(h.pid, shard)
+        return h
 
     def _spawn_thread(self, shard):
         t = threading.Thread(
@@ -213,7 +229,9 @@ class WorkerPool:
             # race attributes the other incarnation
             if not self.queue.complete([wid], worker=worker):
                 continue            # a redelivery raced a straggler
-            det, f = unpack_result(payload)
+            # store data plane: the push was a key ref — materialize it
+            # here, after the gate (losers never cost a store read)
+            det, f = unpack_result(self.service.resolve_result(payload))
             self.service.note_done(worker, wid=wid,
                                    survivors=int(f["n_kept"]),
                                    bytes_out=f["cleaned"].nbytes)
@@ -285,7 +303,7 @@ class WorkerPool:
         the autoscaler calls this too). Returns the new shard id."""
         k = self._next_shard
         self._next_shard += 1
-        if self.transport == "proc":
+        if self.transport in ("proc", "tcp"):
             self._handles[k] = self._spawn(k)
         else:
             self._threads[k] = self._spawn_thread(k)

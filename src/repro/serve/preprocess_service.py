@@ -51,6 +51,7 @@ import numpy as np
 
 from repro.core import scheduler as SCHED
 from repro.core.plans import Preprocessor
+from repro.dist.service import pack_result
 from repro.distributed.sharding import NULL_RULES
 from repro.obs import metrics as obs_metrics
 from repro.obs import tracing as obs_tracing
@@ -146,7 +147,7 @@ class PreprocessService:
             wid = self.pool.submit(batch)
             res = self.pool.wait([wid])[wid]
         if store is not None:
-            store.put(key, *plan._entry(res))
+            store.put_payload(key, pack_result(res))
         return res
 
     def result(self, rid):

@@ -171,7 +171,35 @@ class ChunkStore:
         self.stats.bytes_written += written
         return True
 
+    def put_payload(self, key, payload, src_bytes=0) -> bool:
+        """Persist one flat payload dict (the `pack_result` /
+        `unpack_result` wire shape: ndarray leaves mixed with JSON-safe
+        meta) under `key`. The split is by value type — ndarrays become
+        leaves, everything else rides the manifest meta — so the dist
+        data plane and `CachedPlan` share one entry codec. `src_bytes`
+        is recorded in the meta for later `fetch` accounting. Same
+        first-write-wins semantics as `put`."""
+        arrays = {k: v for k, v in payload.items()
+                  if isinstance(v, np.ndarray)}
+        meta = {k: v for k, v in payload.items()
+                if not isinstance(v, np.ndarray)}
+        if src_bytes:
+            meta.setdefault("src_bytes", int(src_bytes))
+        return self.put(key, arrays, meta)
+
     # -- read ----------------------------------------------------------------
+    def fetch(self, key, src_bytes=0):
+        """Fetch-by-key read path: the flat payload dict ({**leaves,
+        **meta}) for a hit, None for a miss — the inverse of
+        `put_payload` and the shape `unpack_result` consumes. This is
+        the data-plane read used by dist workers and the master's
+        result resolution; `get` remains the (arrays, meta) pair view."""
+        hit = self.get(key, src_bytes=src_bytes)
+        if hit is None:
+            return None
+        arrays, meta = hit
+        return {**arrays, **meta}
+
     def get(self, key, src_bytes=0):
         """({name: ndarray}, meta) for a hit, None for a miss. `src_bytes`
         (the source payload a hit saves reprocessing) feeds bytes_saved.

@@ -1,0 +1,278 @@
+"""The off-master data plane and the worker registry: shard assignment by
+reservation/announce (never argv), the store-backed chunk fetch + result
+push path (lease_chunks grants content keys, the socket carries ~70-byte
+refs instead of megabyte batches), authkey hygiene (env-only, never argv,
+never error text, wrong keys rejected without leaking a handler thread),
+and the crash-consistency story: a result pushed to the store but never
+acked redelivers exactly once, with first-write-wins dedup."""
+import multiprocessing
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import SERF_AUDIO as cfg
+from repro.core.plans import Preprocessor
+from repro.data.loader import audio_batch_maker, make_shard_pool
+from repro.data.queue import WorkQueue
+from repro.dist.data_plane import StoreDataPlane, result_key
+from repro.dist.service import QueueService
+from repro.dist.transport import (InProcTransport, RemoteError,
+                                  TcpTransport)
+from repro.dist.worker import run_worker
+from repro.obs import metrics as obs_metrics
+
+
+def _plane_bytes(name, plane):
+    reg = obs_metrics.get_registry()
+    return reg.counter(name, labels=("plane",)).labels(plane=plane).value
+
+
+# ------------------------------------------------------ worker registry
+
+def test_registry_assigns_reserved_then_sequential():
+    """`hello(None, pid, -1)` is an ANNOUNCE: the registry hands back the
+    shard reserved for that pid at spawn, or the next free id for a
+    walk-up joiner — and explicit legacy identities keep the counter
+    ahead so later announces never collide."""
+    q = WorkQueue(8, lease_timeout_s=60.0)
+    svc = QueueService(q, setup={"pad_multiple": 2})
+    svc.reserve(111, 3)
+    spec = svc.hello(None, pid=111, shard=-1)
+    assert spec["assigned"] == {"worker": "shard3", "shard": 3}
+    assert spec["pad_multiple"] == 2          # setup blob rides along
+    a = svc.hello(None, pid=222, shard=-1)["assigned"]
+    b = svc.hello(None, pid=333, shard=-1)["assigned"]
+    assert (a["shard"], b["shard"]) == (4, 5)  # next free, past the pin
+    shards = {st.worker: st.shard for st in svc.worker_report()}
+    assert shards == {"shard3": 3, "shard4": 4, "shard5": 5}
+    svc.hello("shard9", pid=444, shard=9)      # legacy self-asserted name
+    c = svc.hello(None, pid=555, shard=-1)["assigned"]
+    assert c["shard"] == 10
+
+
+# ------------------------------------------------- store data plane unit
+
+def test_lease_chunks_grants_keys_and_reoffers_cached(tmp_path):
+    """The store-plane lease returns (wid, content key) pairs in ONE
+    round-trip; a redelivered lease re-offers the SAME key without
+    re-hashing or re-writing the raw entry."""
+    chunks = {w: np.full((1, 2, 16), w, np.float32) for w in range(2)}
+    q = WorkQueue(2, lease_timeout_s=60.0)
+    plane = StoreDataPlane(tmp_path / "dp")
+    svc = QueueService(q, fetch_item=lambda wid: chunks[wid],
+                       data_plane=plane)
+    pairs = svc.lease_chunks("a", 2)
+    keys = dict(pairs)
+    assert sorted(keys) == [0, 1]
+    assert all(k.startswith("raw-") for k in keys.values())
+    assert plane.store.stats.writes == 2
+    svc.fail_worker("a")                       # both leases reclaim
+    pairs2 = svc.lease_chunks("b", 2)
+    assert dict(pairs2) == keys                # cached offer, same keys
+    assert plane.store.stats.writes == 2       # no re-publish
+    assert plane.store.stats.dup_writes == 0   # not even a dup attempt
+
+
+def test_lease_chunks_retired_item_yields_none_key(tmp_path):
+    """A work id whose bytes are gone by offer time (retired mid-race)
+    grants a None key the worker skips — never a crash."""
+    q = WorkQueue(2, lease_timeout_s=60.0)
+    plane = StoreDataPlane(tmp_path / "dp")
+    svc = QueueService(
+        q, data_plane=plane,
+        fetch_item=lambda wid: None if wid == 0
+        else np.ones((1, 2, 8), np.float32))
+    pairs = svc.lease_chunks("w", 2)
+    assert pairs[0] == [0, None]
+    assert pairs[1][0] == 1 and pairs[1][1].startswith("raw-")
+
+
+def test_lease_chunks_requires_data_plane():
+    svc = QueueService(WorkQueue(1), fetch_item=lambda wid: None)
+    with pytest.raises(RuntimeError, match="store data plane"):
+        svc.lease_chunks("w", 1)
+
+
+def test_fetch_many_is_one_pass_one_heartbeat():
+    """The batched socket fetch materializes and accounts every item but
+    heartbeats exactly ONCE per round-trip (the per-item loop it replaced
+    extended the lease N times and hammered the monitor)."""
+    q = WorkQueue(3, lease_timeout_s=60.0)
+    svc = QueueService(q, fetch_item=lambda wid: np.full((1, 2, 4), wid,
+                                                         np.float32))
+    ids = svc.lease("w", 3)
+    before = _plane_bytes("dist_fetch_bytes_total", "socket")
+    beats = []
+    orig = svc.heartbeat
+    svc.heartbeat = lambda w: beats.append(w) or orig(w)
+    items = svc.fetch_many("w", ids)
+    assert beats == ["w"]
+    for wid, item in zip(ids, items):
+        np.testing.assert_array_equal(
+            item, np.full((1, 2, 4), wid, np.float32))
+    # every batch's bytes charged to the socket plane
+    assert _plane_bytes("dist_fetch_bytes_total", "socket") - before \
+        == 3 * items[0].nbytes
+
+
+def test_store_plane_pushed_but_unacked_redelivers_exactly_once(tmp_path):
+    """The crash the store plane must absorb: a worker writes its result
+    to the store, then dies BEFORE the push_result ack. The id redelivers
+    (same content key, from the offer cache), the second incarnation's
+    store write loses first-write-wins, and the master accepts exactly
+    once — resolving the FIRST incarnation's bytes."""
+    q = WorkQueue(1, lease_timeout_s=60.0)
+    plane = StoreDataPlane(tmp_path / "dp")
+    svc = QueueService(q, fetch_item=lambda wid: np.ones((1, 2, 8),
+                                                         np.float32),
+                       data_plane=plane)
+    ((wid, key),) = svc.lease_chunks("a", 1)
+    plane.push(key, {"ans": np.arange(4, dtype=np.float32), "mark": 1})
+    svc.fail_worker("a")                       # died pre-ack: no push_result
+    assert q.redeliveries == 1
+    pairs2 = svc.lease_chunks("b", 1)
+    assert pairs2 == [[wid, key]]              # exactly one redelivery
+    ref = plane.push(key, {"ans": np.arange(4, dtype=np.float32),
+                           "mark": 2})         # recompute dedups
+    assert ref == {"store_key": result_key(key)}
+    assert plane.store.stats.dup_writes >= 1
+    svc.push_result("b", wid, ref)
+    ((_, got_wid, got_ref),) = svc.pop_results()
+    assert svc.complete([got_wid]) == [wid]    # accepted exactly once
+    assert svc.complete([got_wid]) == []
+    full = svc.resolve_result(got_ref)
+    assert full["mark"] == 1                   # first write won
+    np.testing.assert_array_equal(full["ans"],
+                                  np.arange(4, dtype=np.float32))
+
+
+# ------------------------------------------- worker runtime, store plane
+
+def test_store_plane_inproc_worker_round_trip(tmp_path):
+    """The REAL worker loop over the store plane: lease_chunks grants
+    keys, chunk bytes and result payloads move through the shared
+    ChunkStore, the socket planes carry ZERO payload bytes, and the
+    resolved results match two_phase bit-for-bit."""
+    n = 2
+    make = audio_batch_maker(seed=9, batch_long_chunks=1)
+    setup = {"cfg": cfg, "stages": None, "source_channels": 2,
+             "pad_multiple": 1, "bucket": "linear", "backend_mode": "auto"}
+    q = WorkQueue(n, lease_timeout_s=60.0)
+    plane = StoreDataPlane(tmp_path / "dp")
+    svc = QueueService(q, fetch_item=lambda wid: make(wid)[0], setup=setup,
+                       data_plane=plane)
+    names = ("dist_fetch_bytes_total", "dist_push_bytes_total")
+    before = {(nm, p): _plane_bytes(nm, p)
+              for nm in names for p in ("socket", "store")}
+    stats = run_worker(svc, shard=None, lease_items=2,
+                       transport=InProcTransport(), max_items=n)
+    assert stats["chunks"] == n
+    got = {}
+    for _, wid, payload in svc.pop_results():
+        assert set(payload) == {"store_key"}   # a ref, never the bytes
+        assert payload["store_key"].startswith("res-")
+        got[wid] = svc.resolve_result(payload)
+    assert sorted(got) == list(range(n))
+    assert q.complete(sorted(got)) == list(range(n))
+    ref = Preprocessor(cfg, plan="two_phase", pad_multiple=1)
+    for wid, payload in got.items():
+        want = ref(make(wid)[0])
+        np.testing.assert_array_equal(payload["keep"],
+                                      np.asarray(want.det.keep))
+        np.testing.assert_array_equal(payload["cleaned"], want.cleaned)
+        assert payload["n_kept"] == want.n_kept
+    assert len(plane.store) == 2 * n           # n raw + n result entries
+    delta = {k: _plane_bytes(*k) - v for k, v in before.items()}
+    raw_bytes = sum(np.ascontiguousarray(make(w)[0]).nbytes
+                    for w in range(n))
+    assert delta[("dist_fetch_bytes_total", "socket")] == 0
+    assert delta[("dist_push_bytes_total", "socket")] == 0
+    assert 0 < delta[("dist_fetch_bytes_total", "store")] < raw_bytes * 0.1
+    assert 0 < delta[("dist_push_bytes_total", "store")] < raw_bytes * 0.1
+
+
+# ------------------------------------------------------- authkey hygiene
+
+def test_authkey_env_only_never_argv_never_error_text():
+    """Regression: the authkey reaches workers via REPRO_DIST_AUTHKEY
+    only — never argv (visible in `ps`), and never the text of a
+    RemoteError shipped back over the wire. Spawned argv also carries no
+    --shard: identity comes from the registry."""
+    tp = TcpTransport()
+    svc = QueueService(WorkQueue(1, lease_timeout_s=60.0), setup={})
+    addr = tp.serve(svc)
+    try:
+        key = tp._authkey
+        assert key and key not in addr
+        h = tp.spawn_worker(shard=0)
+        argv = " ".join(map(str, h.proc.args))
+        h.kill()                               # argv is all we needed
+        assert key not in argv
+        assert "--shard" not in argv
+        proxy = tp.connect(addr, authkey=key)
+        with pytest.raises(RemoteError) as not_served:
+            proxy.call("pop_results")          # master-side only
+        assert key not in str(not_served.value)
+        with pytest.raises(RemoteError) as raised:
+            proxy.call("lease_chunks", "w", 1)  # raises: no data plane
+        assert "RuntimeError" in str(raised.value)
+        assert key not in str(raised.value)
+        proxy.close()
+        h.proc.wait(10)
+    finally:
+        tp.close()
+
+
+def test_wrong_authkey_rejected_no_handler_thread_leak():
+    """A wrong-key connect fails the handshake inside Listener.accept():
+    the client sees AuthenticationError, the master spawns NO handler
+    thread for it, and the listener keeps serving correct-key peers."""
+    tp = TcpTransport()
+    svc = QueueService(WorkQueue(1, lease_timeout_s=60.0))
+    addr = tp.serve(svc)
+    try:
+        host, _, port = addr.rpartition(":")
+        n_before = sum(t.name == "repro-dist-conn"
+                       for t in threading.enumerate())
+        from multiprocessing.connection import Client
+        with pytest.raises(multiprocessing.AuthenticationError):
+            Client((host, int(port)), authkey=b"not-the-key")
+        time.sleep(0.2)
+        n_after = sum(t.name == "repro-dist-conn"
+                      for t in threading.enumerate())
+        assert n_after <= n_before             # no thread for the intruder
+        proxy = tp.connect(addr)               # listener survived
+        assert tuple(proxy.call("progress")) == (0, 1)
+        proxy.close()
+    finally:
+        tp.close()
+
+
+# ------------------------------------- crash recovery over the store plane
+
+def test_store_plane_sigkill_redelivered_exactly_once(tmp_path):
+    """Acceptance: a worker SIGKILLed at its first grant, on the TCP
+    transport with the store data plane, still yields every chunk exactly
+    once, bit-identical to two_phase, with redeliveries >= 1."""
+    from repro.ft.failure import CrashInjector
+
+    n_batches = 3
+    make = audio_batch_maker(seed=5, batch_long_chunks=1)
+    pool = make_shard_pool(make, n_batches, 2, lease_timeout_s=120.0)
+    inj = CrashInjector()
+    inj.kill(1, after_items=0)                 # shard1 dies at first grant
+    pre = Preprocessor(cfg, plan="sharded", shards=2, pad_multiple=1,
+                       transport="tcp", injector=inj,
+                       data_plane=str(tmp_path / "dp"))
+    results = list(pre.run(pool))
+    assert sorted(r.wid for r in results) == list(range(n_batches))
+    assert pre.plan.redeliveries >= 1
+    assert not inj.alive(1)
+    ref = Preprocessor(cfg, plan="two_phase", pad_multiple=1)
+    for r in results:
+        want = ref(make(r.wid)[0])
+        np.testing.assert_array_equal(np.asarray(r.det.keep),
+                                      np.asarray(want.det.keep))
+        np.testing.assert_array_equal(r.cleaned, want.cleaned)

@@ -171,24 +171,30 @@ def _stream(n_batches):
 
 
 @pytest.mark.parametrize("shards", [1, 2, 4])
-def test_transport_parity_bit_identical(shards):
+def test_transport_parity_bit_identical(shards, tmp_path):
     """Acceptance: the same seeded stream through the in-proc simulated
-    transport and through REAL worker processes yields bit-identical keep
+    transport, through REAL worker processes over loopback, and through
+    the TCP transport with the STORE data plane (chunk bytes via a shared
+    ChunkStore, the socket carrying only keys) yields bit-identical keep
     masks, bit-identical cleaned audio, and identical emission order."""
     stream = _stream(3)
     runs = {}
-    for transport in ("inproc", "proc"):
+    for transport in ("inproc", "proc", "tcp"):
+        kw = ({"data_plane": str(tmp_path / "dp")}
+              if transport == "tcp" else {})
         pre = Preprocessor(cfg, plan="sharded", shards=shards,
-                           pad_multiple=1, transport=transport)
+                           pad_multiple=1, transport=transport, **kw)
         results = list(pre.run(list(stream)))
         runs[transport] = results
         assert sorted(r.wid for r in results) == [0, 1, 2]
-    order = [[r.wid for r in rs] for rs in runs.values()]
-    assert order[0] == order[1], f"emission order diverged: {order}"
-    for a, b in zip(runs["inproc"], runs["proc"]):
-        assert a.wid == b.wid
-        np.testing.assert_array_equal(np.asarray(a.det.keep),
-                                      np.asarray(b.det.keep))
-        np.testing.assert_array_equal(a.cleaned, b.cleaned)
-        assert a.n_kept == b.n_kept
-        assert a.src_bytes == b.src_bytes
+    orders = [[r.wid for r in rs] for rs in runs.values()]
+    assert all(o == orders[0] for o in orders), \
+        f"emission order diverged: {orders}"
+    for other in ("proc", "tcp"):
+        for a, b in zip(runs["inproc"], runs[other]):
+            assert a.wid == b.wid
+            np.testing.assert_array_equal(np.asarray(a.det.keep),
+                                          np.asarray(b.det.keep))
+            np.testing.assert_array_equal(a.cleaned, b.cleaned)
+            assert a.n_kept == b.n_kept
+            assert a.src_bytes == b.src_bytes
